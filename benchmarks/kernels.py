@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — wall-clock here is NOT
+the TPU number; the derived column reports the work per call so the
+roofline section can translate to TPU time analytically)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(f, *args, iters=3):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run_kernel_benches(full: bool):
+    from repro.kernels.bloom import bloom_probe, build_indicator
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ssd import ssd_scan
+
+    out = []
+    rng = jax.random.PRNGKey(0)
+
+    # bloom: B keys x n caches
+    n, mbytes, k, bkeys = 4, 2048, 10, 1024
+    member = jnp.arange(500)
+    bits = jnp.stack([build_indicator(member, mbytes * 8, k, seed=j)
+                      for j in range(n)])
+    keys = jnp.arange(bkeys, dtype=jnp.int32)
+    dt = _time(lambda b_, k_: bloom_probe(b_, k_, k=k), bits, keys)
+    probes = bkeys * n * k
+    out.append(("kernel_bloom_probe", dt / bkeys * 1e6, probes))
+
+    # flash attention fwd
+    b, s, hq, hkv, d = (2, 1024, 8, 2, 64) if full else (1, 512, 4, 2, 64)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    kk = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    dt = _time(lambda *a: flash_attention(*a), q, kk, v, iters=1)
+    flops = 4.0 * b * hq * s * s * d
+    out.append(("kernel_flash_attention", dt * 1e6, flops))
+
+    # ssd
+    b, s, h, p, nstate = (2, 1024, 4, 64, 64) if full else (1, 512, 2, 64, 64)
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dts = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1.0)
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,), minval=-1.0, maxval=1.0))
+    B = jax.random.normal(ks[3], (b, s, nstate), jnp.float32)
+    C = jax.random.normal(ks[4], (b, s, nstate), jnp.float32)
+    dt = _time(lambda *a: ssd_scan(*a, chunk=128), x, dts, A, B, C, iters=1)
+    out.append(("kernel_ssd_scan", dt * 1e6, b * s * h * p * nstate))
+    return out

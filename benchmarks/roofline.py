@@ -1,0 +1,67 @@
+"""Roofline report generator: reads artifacts/dryrun/*.json, emits the
+EXPERIMENTS.md tables (and a machine-readable summary).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load(mesh: str):
+    rows = []
+    for p in sorted(glob.glob(str(ART / f"*__{mesh}.json"))):
+        d = json.load(open(p))
+        rows.append(d)
+    return rows
+
+
+def fmt_table(rows, md: bool = False):
+    hdr = ["arch", "shape", "t_compute(s)", "t_memory(s)", "t_collective(s)",
+           "bottleneck", "useful_flops", "roofline_mfu", "temp_GB/dev"]
+    out = []
+    if md:
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+    else:
+        out.append(f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+                   f"{'t_coll':>9s} {'bneck':>10s} {'useful':>7s} {'mfu':>7s} {'tmpGB':>6s}")
+    for d in rows:
+        r = d["roofline"]
+        temp = d["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9
+        vals = [d["arch"], d["shape"], f"{r['t_compute_s']:.4f}",
+                f"{r['t_memory_s']:.4f}", f"{r['t_collective_s']:.4f}",
+                r["bottleneck"], f"{r['useful_flops_ratio']:.3f}",
+                f"{r['mfu_at_roofline']:.4f}", f"{temp:.1f}"]
+        if md:
+            out.append("| " + " | ".join(vals) + " |")
+        else:
+            out.append(f"{vals[0]:22s} {vals[1]:12s} {vals[2]:>9s} {vals[3]:>9s} "
+                       f"{vals[4]:>9s} {vals[5]:>10s} {vals[6]:>7s} {vals[7]:>7s} {vals[8]:>6s}")
+    return "\n".join(out)
+
+
+def dominant_summary(rows):
+    from collections import Counter
+    c = Counter(d["roofline"]["bottleneck"] for d in rows)
+    return dict(c)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    print(fmt_table(rows, md=args.md))
+    print()
+    print("bottleneck histogram:", dominant_summary(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Benchmark harness: one entry per paper figure + framework micro-benches.
+
+Prints ``name,us_per_call,derived`` CSV (one line per benchmark):
+  * paper figures:  us_per_call = simulated-request latency; derived =
+    the figure's headline scalar (see benchmarks/paper_figs.py).
+  * router/kernel micro-benches: us_per_call = wall-clock per call on this
+    host; derived = the relevant throughput/quality scalar.
+
+``python -m benchmarks.run [--full] [--only section[,section...]]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def paper_fig_benches(full: bool):
+    from benchmarks.paper_figs import FIGS, _scale, run_fig
+
+    out = []
+    for name in FIGS:
+        rows, derived, dt = run_fig(name, full)
+        reqs = _scale(full)[0] * max(len(rows), 1)
+        us = dt / max(reqs, 1) * 1e6
+        out.append((name, us, derived))
+    return out
+
+
+def router_bench(full: bool):
+    """Batched FNA router (paper technique on the serving path): wall-clock
+    per routed request, JAX jitted on this host."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.batched import cs_fna_batched
+
+    n, b = 16, 4096
+    rng = np.random.default_rng(0)
+    costs = jnp.asarray(rng.uniform(1, 3, n), jnp.float32)
+    q = jnp.asarray(rng.uniform(0.2, 0.8, n), jnp.float32)
+    fp = jnp.asarray(rng.uniform(0.001, 0.05, n), jnp.float32)
+    fn = jnp.asarray(rng.uniform(0.0, 0.4, n), jnp.float32)
+    ind = jnp.asarray(rng.random((b, n)) < 0.3, jnp.int32)
+    f = jax.jit(lambda i: cs_fna_batched(i, costs, q, fp, fn, 100.0))
+    f(ind).block_until_ready()
+    iters = 50 if full else 20
+    t0 = time.time()
+    for _ in range(iters):
+        f(ind).block_until_ready()
+    dt = (time.time() - t0) / iters
+    mask = np.asarray(f(ind))
+    return [("router_cs_fna_batched", dt / b * 1e6, float(mask.mean()))]
+
+
+def kernel_benches(full: bool):
+    out = []
+    try:
+        from benchmarks.kernels import run_kernel_benches
+        out.extend(run_kernel_benches(full))
+    except ImportError:
+        pass
+    return out
+
+
+def serving_bench(full: bool):
+    out = []
+    try:
+        from benchmarks.serving import run_serving_bench
+        out.extend(run_serving_bench(full))
+    except ImportError:
+        pass
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale parameters")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    sections = {
+        "paper": paper_fig_benches,
+        "router": router_bench,
+        "kernels": kernel_benches,
+        "serving": serving_bench,
+    }
+    print("name,us_per_call,derived")
+    for sec, fn in sections.items():
+        if only and sec not in only:
+            continue
+        for name, us, derived in fn(args.full):
+            print(f"{name},{us:.3f},{derived:.6g}")
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: the paper's FNA cache selection in 60 seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Builds a 3-cache system with stale Bloom-filter indicators.
+2. Replays a recency-biased trace (the staleness-hostile regime).
+3. Compares the paper's CS_FNA, our calibrated FNA, the FNO baseline,
+   and the perfect-information lower bound.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.cachesim import SimConfig, get_trace
+from repro.cachesim.simulator import run_policies
+
+
+def main():
+    trace = get_trace("gradle", 40_000, seed=0)
+    base = SimConfig(n_caches=3, cache_size=2_000, costs=(1.0, 2.0, 3.0),
+                     miss_penalty=100.0, bpe=14.0, update_interval=512)
+    print("policy      mean-cost   vs-PI   hit-ratio   negative-accesses")
+    res = run_policies(trace, base, policies=("pi", "fno", "fna", "fna_cal"))
+    pi_cost = res["pi"].mean_cost
+    for name in ("pi", "fno", "fna", "fna_cal"):
+        r = res[name]
+        print(f"{name:10s} {r.mean_cost:9.3f} {r.mean_cost / pi_cost:7.3f}"
+              f" {r.hit_ratio:10.3f} {r.neg_accesses:15d}")
+    print("\nfna  = the paper's Algorithm 2 (Eqs. 7-9 estimation)")
+    print("fna_cal = + empirical exclusion-probability feedback (ours)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""END-TO-END DRIVER (serving): FNA-routed distributed prefix-KV cache.
+
+  PYTHONPATH=src python examples/serve_prefix_cache.py [--requests 300]
+
+A reduced SmolLM serves batched requests.  Prompts share prefixes (system
+prompts / few-shot headers) whose prefill KV caches live on 4 cache nodes
+advertising stale Bloom indicators.  The router decides which nodes to
+probe with the paper's false-negative-aware policy; misses pay REAL
+prefill compute on this host.  We report service cost AND wall-clock for
+FNA vs FNO routing.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cachesim.traces import recency_trace
+from repro.configs import get_config
+from repro.serving import ClusterConfig, PrefixServeCluster, ServeEngine
+
+PREFIX_LEN = 24
+DECODE_STEPS = 4
+
+
+def run(policy: str, n_requests: int, engine: ServeEngine, prefixes, stream):
+    cfg = ClusterConfig(n_nodes=4, node_capacity=64, update_interval=32,
+                        miss_penalty=40.0, policy=policy)
+    cluster = PrefixServeCluster(cfg, seed=1)
+    t0 = time.time()
+    prefill_s = 0.0
+    for i in range(n_requests):
+        pid = int(stream[i])
+        tokens = prefixes[pid % len(prefixes)]
+
+        def make_kv():
+            nonlocal prefill_s
+            t1 = time.time()
+            _, cache = engine.prefill(tokens, max_len=PREFIX_LEN + DECODE_STEPS + 2)
+            prefill_s += time.time() - t1
+            return cache
+
+        kv, cost = cluster.request(pid, make_kv=make_kv)
+        # decode a few tokens from the (hit or freshly built) prefix KV
+        first = jnp.zeros((tokens.shape[0],), jnp.int32)
+        engine.decode(kv, first, DECODE_STEPS)
+    wall = time.time() - t0
+    return cluster.stats, wall, prefill_s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m").reduced()
+    engine = ServeEngine(cfg)
+    rng = np.random.default_rng(0)
+    prefixes = [rng.integers(0, cfg.vocab, (1, PREFIX_LEN)).astype(np.int32)
+                for _ in range(256)]
+    stream = recency_trace(args.requests, p_new=0.15, window=96, seed=2)
+
+    print(f"{args.requests} requests, reduced {cfg.name}, 4 cache nodes, "
+          f"update interval 32 insertions\n")
+    print("policy    mean-cost  hit-ratio  prefills  neg-probes  wall-s  prefill-s")
+    for policy in ("fno", "fna", "fna_cal", "pi"):
+        stats, wall, prefill_s = run(policy, args.requests, engine, prefixes, stream)
+        print(f"{policy:9s} {stats.mean_cost:8.2f} {stats.hit_ratio:9.3f} "
+              f"{stats.prefills:9d} {stats.neg_probes:10d} {wall:7.1f} {prefill_s:8.1f}")
+    print("\nLower mean-cost == fewer prefill recomputes for the same "
+          "indicator bandwidth (the paper's claim, on a live serving path).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.cachesim.lru import LRUCache
+from repro.cachesim.simulator import SimConfig, SimResult, Simulator
+from repro.cachesim.traces import get_trace, TRACES
+
+__all__ = ["LRUCache", "SimConfig", "SimResult", "Simulator", "get_trace", "TRACES"]

@@ -1,0 +1,321 @@
+"""Trace-driven multi-cache simulator (paper Sec. V).
+
+System model:
+  * n caches (LRU) with sizes C_j and access costs c_j; miss penalty M.
+  * the controller places each (missed) item in a single designated cache,
+    chosen by hashing the key — the load-balancing/content-maximising
+    policy of Sec. V-A ("a missed item is placed in a single cache chosen
+    by the controller"), which also makes cache dynamics identical across
+    access policies (fair comparison).
+  * each cache keeps a CBF for bookkeeping, advertises a compressed bitmap
+    every ``update_interval`` insertions, and re-estimates (FP, FN) via
+    Eqs. (7)-(8) every ``est_interval`` insertions.
+  * the client runs CS_FNA / CS_FNO (Algorithm 2) with per-cache EWMA
+    q-estimates (Eq. 9), or the PI lower bound.
+
+Every request pays sum(c_j for j accessed) + M if no accessed cache holds
+the item (the realised service cost; its mean is the paper's metric).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import (
+    CacheView,
+    QEstimator,
+    cs_fna,
+    cs_fno,
+    ds_pgm,
+    exhaustive,
+    hash_indices,
+    optimal_k,
+    perfect_information,
+)
+from repro.core.indicator import StaleIndicatorPair
+from repro.cachesim.lru import LRUCache
+
+
+@dataclass
+class SimConfig:
+    n_caches: int = 3
+    cache_size: int = 10_000
+    costs: Sequence[float] = (1.0, 2.0, 3.0)
+    miss_penalty: float = 100.0
+    bpe: float = 14.0
+    update_interval: int = 1_000      # insertions between advertisements
+    est_interval: int = 50            # insertions between FP/FN re-estimation
+    q_horizon: int = 100              # Eq. (9) epoch T
+    q_delta: float = 0.25             # Eq. (9) smoothing
+    policy: str = "fna"               # fna | fna_cal | fno | pi | hocs
+    # "hocs": Algorithm 1 (fully-homogeneous optimal) — requires identical
+    # costs; uses pooled pi/nu estimates and accesses the r1* cheapest
+    # positive + r0* cheapest negative caches.
+    alg: str = "ds_pgm"               # ds_pgm | exhaustive (subroutine)
+    seed: int = 0
+    # --- fna_cal (beyond-paper): empirical exclusion-probability feedback ---
+    # Eq. (7) counts BITS, inflating FN by ~k when staleness concentrates in
+    # few items; fna_cal corrects nu/pi with EWMA outcomes of its own probes
+    # (plus epsilon-exploration so the estimate can't freeze).
+    cal_gamma: float = 0.05
+    cal_min_obs: int = 30
+    cal_epsilon: float = 0.005
+
+    def __post_init__(self):
+        if len(self.costs) != self.n_caches:
+            self.costs = tuple(
+                1.0 + (i % 3) for i in range(self.n_caches)) if self.n_caches != 3 \
+                else (1.0, 2.0, 3.0)
+
+
+@dataclass
+class SimResult:
+    policy: str
+    n_requests: int = 0
+    total_cost: float = 0.0
+    hits: int = 0
+    pos_accesses: int = 0
+    neg_accesses: int = 0
+    # designated-cache indicator quality (Fig. 1 measurement)
+    fn_events: int = 0
+    fn_opportunities: int = 0
+    fp_events: int = 0
+    fp_opportunities: int = 0
+    resident: int = 0
+
+    @property
+    def mean_cost(self) -> float:
+        return self.total_cost / max(self.n_requests, 1)
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hits / max(self.n_requests, 1)
+
+    @property
+    def fn_ratio(self) -> float:
+        return self.fn_events / max(self.fn_opportunities, 1)
+
+    @property
+    def fp_ratio(self) -> float:
+        return self.fp_events / max(self.fp_opportunities, 1)
+
+    def to_dict(self) -> Dict:
+        return {
+            "policy": self.policy, "n": self.n_requests,
+            "mean_cost": round(self.mean_cost, 4),
+            "hit_ratio": round(self.hit_ratio, 4),
+            "fn_ratio": round(self.fn_ratio, 5),
+            "fp_ratio": round(self.fp_ratio, 5),
+            "pos_accesses": self.pos_accesses, "neg_accesses": self.neg_accesses,
+        }
+
+
+class _CacheNode:
+    def __init__(self, size: int, bpe: float, seed: int,
+                 update_interval: int, est_interval: int):
+        self.lru = LRUCache(size)
+        m = int(bpe * size)
+        k = optimal_k(bpe)
+        self.ind = StaleIndicatorPair(m, k, seed=seed)
+        self.update_interval = update_interval
+        self.est_interval = est_interval
+        self.version = 0  # bumped whenever fp/fn estimates change
+        self._since_adv = 0
+        self._since_est = 0
+        self._idx_memo: Dict[int, np.ndarray] = {}
+        self.ind.advertise()
+
+    def _idx(self, key: int) -> np.ndarray:
+        r = self._idx_memo.get(key)
+        if r is None:
+            r = hash_indices(np.asarray([key], dtype=np.uint64),
+                             self.ind.cbf.k, self.ind.cbf.m, self.ind.cbf.seed)[0]
+            self._idx_memo[key] = r
+        return r
+
+    def stale_query(self, key: int) -> bool:
+        return bool(np.all(self.ind.stale[self._idx(key)]))
+
+    def insert(self, key: int) -> None:
+        """Controller placement: LRU put + CBF bookkeeping + periodic
+        advertisement / estimation driven by insertions."""
+        inserted, evicted = self.lru.put(key)
+        if not inserted:
+            return
+        c = self.ind.cbf
+        idx = self._idx(key)
+        c.counters[idx] = np.minimum(c.counters[idx].astype(np.int32) + 1, 255)
+        if evicted is not None:
+            eidx = self._idx(evicted)
+            c.counters[eidx] = np.maximum(c.counters[eidx].astype(np.int32) - 1, 0)
+        self._since_adv += 1
+        self._since_est += 1
+        if self._since_est >= self.est_interval:
+            self.ind.estimate_rates()
+            self._since_est = 0
+            self.version += 1
+        if self._since_adv >= self.update_interval:
+            self.ind.advertise()
+            # a fresh advertisement resets the staleness estimates
+            self.ind.estimate_rates()
+            self._since_adv = 0
+            self._since_est = 0
+            self.version += 1
+
+
+class Simulator:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.nodes = [
+            _CacheNode(cfg.cache_size, cfg.bpe, seed=cfg.seed * 1000 + j,
+                       update_interval=cfg.update_interval,
+                       est_interval=cfg.est_interval)
+            for j in range(cfg.n_caches)
+        ]
+        self.q_est = [QEstimator(cfg.q_horizon, cfg.q_delta)
+                      for _ in range(cfg.n_caches)]
+        self.alg = {"ds_pgm": ds_pgm, "exhaustive": exhaustive}[cfg.alg]
+
+    def _designated(self, key: int) -> int:
+        return int(key) % self.cfg.n_caches
+
+    def _refresh_views(self):
+        """Recompute per-cache (pi, nu) only when fp/fn/q estimates moved."""
+        from repro.core.model import exclusion_probabilities, hit_ratio_from_q
+        for j, nd in enumerate(self.nodes):
+            ver = (nd.version, self.q_est[j].version)
+            if self._view_ver[j] != ver:
+                fp, fn, q = nd.ind.fp_est, nd.ind.fn_est, self.q_est[j].value
+                h = hit_ratio_from_q(q, fp, fn)
+                self._pi[j], self._nu[j] = exclusion_probabilities(h, fp, fn)
+                self._view_ver[j] = ver
+
+    def run(self, trace: np.ndarray, result: Optional[SimResult] = None) -> SimResult:
+        cfg = self.cfg
+        res = result or SimResult(policy=cfg.policy)
+        costs = list(cfg.costs)
+        n = cfg.n_caches
+        M = cfg.miss_penalty
+        nodes = self.nodes
+        self._pi = [1.0] * n
+        self._nu = [1.0] * n
+        self._view_ver = [None] * n
+        # fna_cal empirical estimators (miss prob given indication, per cache).
+        # Optimistic init: when FP+FN >= ~1 the indicator is uninformative and
+        # h is UNIDENTIFIABLE from (q, FP, FN) — Eq. (1) inversion clamps to
+        # h=0, nu=1 and no model-based policy ever probes.  Optimism under
+        # uncertainty bootstraps the empirical estimator out of that fixed
+        # point (see EXPERIMENTS.md §Perf R-series).
+        cal = cfg.policy == "fna_cal"
+        nu_emp = [0.90] * n
+        pi_emp = [0.5] * n
+        nu_obs = [0] * n
+        pi_obs = [0] * n
+        g = cfg.cal_gamma
+        rng_cal = np.random.default_rng(cfg.seed + 12345)
+        eps_draws = rng_cal.random(trace.shape[0]) if cal else None
+        eps_pick = rng_cal.integers(0, n, trace.shape[0]) if cal else None
+        # vectorised stale-query indices for the whole trace, per cache
+        trace = np.asarray(trace, dtype=np.uint64)
+        idx_all = [hash_indices(trace, nd.ind.cbf.k, nd.ind.cbf.m, nd.ind.cbf.seed)
+                   for nd in nodes]
+        is_pi = cfg.policy == "pi"
+        is_fna = cfg.policy == "fna"
+        alg = self.alg
+        for i in range(trace.shape[0]):
+            x = int(trace[i])
+            indications = [bool(nodes[j].ind.stale[idx_all[j][i]].all())
+                           for j in range(n)]
+            for qe, ind in zip(self.q_est, indications):
+                qe.observe(ind)
+            # --- indicator-quality measurement on the designated cache ---
+            dj = x % n
+            in_dj = x in nodes[dj].lru
+            if in_dj:
+                res.fn_opportunities += 1
+                res.fn_events += int(not indications[dj])
+                res.resident += 1
+            else:
+                res.fp_opportunities += 1
+                res.fp_events += int(indications[dj])
+            # --- selection ---
+            if is_pi:
+                sel = perfect_information(costs, [x in nd.lru for nd in nodes])
+            else:
+                self._refresh_views()
+                if cfg.policy == "fna_cal":
+                    # blend: model-based (Eqs. 7-9) until enough probe
+                    # outcomes; switch to the empirical EWMA immediately when
+                    # the indicator is uninformative (FP+FN ~ 1)
+                    rhos = []
+                    for j in range(n):
+                        uninformative = (nodes[j].ind.fp_est +
+                                         nodes[j].ind.fn_est) >= 0.95
+                        if indications[j]:
+                            use_emp = pi_obs[j] >= cfg.cal_min_obs or uninformative
+                            r = pi_emp[j] if use_emp else self._pi[j]
+                        else:
+                            use_emp = nu_obs[j] >= cfg.cal_min_obs or uninformative
+                            r = nu_emp[j] if use_emp else self._nu[j]
+                        rhos.append(r)
+                    sel = alg(costs, rhos, M)
+                    if eps_draws[i] < cfg.cal_epsilon:  # forced exploration
+                        jx = int(eps_pick[i])
+                        if jx not in sel:
+                            sel = sorted(sel + [jx])
+                elif cfg.policy == "hocs":  # Algorithm 1 (homogeneous)
+                    pos = [j for j in range(n) if indications[j]]
+                    neg = [j for j in range(n) if not indications[j]]
+                    pi_h = sum(self._pi) / n
+                    nu_h = sum(self._nu) / n
+                    from repro.core import hocs_fna as _hocs
+                    r0, r1 = _hocs(len(pos), n, pi_h, nu_h, M)
+                    sel = sorted(pos[:r1] + neg[:r0])
+                elif is_fna:  # Algorithm 2: rho = pi on positive, nu on negative
+                    rhos = [self._pi[j] if indications[j] else self._nu[j]
+                            for j in range(n)]
+                    sel = alg(costs, rhos, M)
+                else:       # FNO: positive-indication caches only
+                    pos = [j for j in range(n) if indications[j]]
+                    if pos:
+                        sub = alg([costs[j] for j in pos],
+                                  [self._pi[j] for j in pos], M)
+                        sel = [pos[t] for t in sub]
+                    else:
+                        sel = []
+                if cal:  # feed probe outcomes back into the estimators
+                    for j in sel:
+                        absent = x not in nodes[j].lru
+                        if indications[j]:
+                            pi_emp[j] = (1 - g) * pi_emp[j] + g * absent
+                            pi_obs[j] += 1
+                        else:
+                            nu_emp[j] = (1 - g) * nu_emp[j] + g * absent
+                            nu_obs[j] += 1
+            # --- realised cost ---
+            cost = sum(costs[j] for j in sel)
+            hit = any(x in nodes[j].lru for j in sel)
+            if not hit:
+                cost += M
+            res.total_cost += cost
+            res.hits += int(hit)
+            res.pos_accesses += sum(1 for j in sel if indications[j])
+            res.neg_accesses += sum(1 for j in sel if not indications[j])
+            res.n_requests += 1
+            # --- system update: fetch-and-place into the designated cache ---
+            nodes[dj].insert(x)
+        return res
+
+
+def run_policies(trace: np.ndarray, base: SimConfig,
+                 policies: Sequence[str] = ("fna", "fno", "pi")) -> Dict[str, SimResult]:
+    """Run several policies over the same trace (independent sim instances —
+    cache dynamics are identical by construction)."""
+    import dataclasses
+    out = {}
+    for p in policies:
+        cfg = dataclasses.replace(base, policy=p)
+        out[p] = Simulator(cfg).run(trace)
+    return out

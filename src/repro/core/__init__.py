@@ -1,0 +1,38 @@
+"""The paper's primary contribution: false-negative-aware cache selection
+with stale indicators (Cohen, Einziger, Scalosub, 2021)."""
+from repro.core.model import (
+    CacheView,
+    exclusion_probabilities,
+    hit_ratio_from_q,
+    is_sufficiently_accurate,
+    phi_hat,
+    positive_indication_ratio,
+    service_cost,
+)
+from repro.core.policies import (
+    cs_fna,
+    cs_fno,
+    ds_pgm,
+    exhaustive,
+    expected_cost,
+    hocs_fna,
+    perfect_information,
+    rho_vector,
+)
+from repro.core.indicator import (
+    CountingBloomFilter,
+    StaleIndicatorPair,
+    hash_indices,
+    optimal_k,
+    theoretical_fp,
+)
+from repro.core.estimator import QEstimator, WindowedRatio
+
+__all__ = [
+    "CacheView", "exclusion_probabilities", "hit_ratio_from_q",
+    "is_sufficiently_accurate", "phi_hat", "positive_indication_ratio",
+    "service_cost", "cs_fna", "cs_fno", "ds_pgm", "exhaustive",
+    "expected_cost", "hocs_fna", "perfect_information", "rho_vector",
+    "CountingBloomFilter", "StaleIndicatorPair", "hash_indices", "optimal_k",
+    "theoretical_fp", "QEstimator", "WindowedRatio",
+]

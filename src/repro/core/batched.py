@@ -1,0 +1,112 @@
+"""Vectorised JAX twin of the paper's math — the production router path.
+
+Everything operates on a BATCH of requests at once so the serving router
+can make thousands of FNA cache-selection decisions per step on-device,
+fed directly by the Pallas Bloom-probe kernel (kernels/bloom).
+
+Shapes: B = batch of requests, N = caches.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def exclusions(h, fp, fn) -> Tuple[jax.Array, jax.Array]:
+    """Eqs. (1)-(3), elementwise."""
+    q = h * (1.0 - fn) + (1.0 - h) * fp
+    pi = jnp.clip(fp * (1.0 - h) / jnp.maximum(q, EPS), 0.0, 1.0)
+    nu = jnp.clip((1.0 - fp) * (1.0 - h) / jnp.maximum(1.0 - q, EPS), 0.0, 1.0)
+    return pi, nu
+
+
+def hit_from_q(q, fp, fn):
+    denom = 1.0 - fp - fn
+    return jnp.clip((q - fp) / jnp.where(jnp.abs(denom) < EPS, 1.0, denom), 0.0, 1.0)
+
+
+def rho_matrix(indications, q, fp, fn) -> jax.Array:
+    """[B,N] rho_j per request: pi_j on positive, nu_j on negative."""
+    h = hit_from_q(q, fp, fn)
+    pi, nu = exclusions(h, fp, fn)
+    return jnp.where(indications > 0, pi[None, :], nu[None, :])
+
+
+def ds_pgm_batched(costs, rhos, miss_penalty, *, fno_mask=None) -> jax.Array:
+    """Batched DS_PGM prefix evaluation.
+
+    costs: [N]; rhos: [B,N]; optional fno_mask [B,N] (1 = cache may be
+    accessed; CS_FNO passes the positive-indication mask, CS_FNA all-ones).
+    Returns a selection mask [B,N] (bool).
+    """
+    b, n = rhos.shape
+    r = jnp.clip(rhos, EPS, 1.0 - EPS)
+    key = costs[None, :] / -jnp.log(r)                      # [B,N]
+    if fno_mask is not None:
+        key = jnp.where(fno_mask > 0, key, jnp.inf)         # excluded -> last
+    order = jnp.argsort(key, axis=1)                        # ascending
+    c_sorted = jnp.take_along_axis(jnp.broadcast_to(costs[None], (b, n)), order, 1)
+    r_sorted = jnp.take_along_axis(r, order, 1)
+    if fno_mask is not None:
+        allowed = jnp.take_along_axis(fno_mask > 0, order, 1)
+        c_sorted = jnp.where(allowed, c_sorted, jnp.inf)    # never pick excluded
+        r_sorted = jnp.where(allowed, r_sorted, 1.0)
+    csum = jnp.cumsum(c_sorted, axis=1)
+    lprod = jnp.cumsum(jnp.log(r_sorted), axis=1)
+    # prefix costs phi(P_i), i = 0..n (0 = empty set)
+    phi = jnp.concatenate(
+        [jnp.full((b, 1), miss_penalty, csum.dtype),
+         csum + miss_penalty * jnp.exp(lprod)], axis=1)     # [B, N+1]
+    best = jnp.argmin(phi, axis=1)                          # prefix length
+    pick_sorted = jnp.arange(n)[None, :] < best[:, None]    # [B,N] in sorted order
+    # scatter back to cache order
+    mask = jnp.zeros((b, n), bool)
+    mask = jnp.take_along_axis(
+        pick_sorted, jnp.argsort(order, axis=1), axis=1)
+    return mask
+
+
+def cs_fna_batched(indications, costs, q, fp, fn, miss_penalty) -> jax.Array:
+    """Algorithm 2, batched: all caches candidates, rho by indication."""
+    rhos = rho_matrix(indications, q, fp, fn)
+    return ds_pgm_batched(costs, rhos, miss_penalty)
+
+
+def cs_fno_batched(indications, costs, q, fp, fn, miss_penalty) -> jax.Array:
+    """FNO baseline, batched: positive-indication caches only."""
+    rhos = rho_matrix(indications, q, fp, fn)
+    return ds_pgm_batched(costs, rhos, miss_penalty, fno_mask=indications)
+
+
+def hocs_fna_batched(n_x, n, pi, nu, miss_penalty) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 1, batched over requests (homogeneous parameters).
+
+    n_x: [B] positive-indication counts.  Returns (r0, r1) int32 [B].
+    """
+    def argmin_geo(m_eff, rho, r_max):
+        rho_c = jnp.clip(rho, EPS, 1.0 - EPS)
+        l = jnp.log(1.0 / rho_c)
+        r_cont = jnp.log(jnp.maximum(m_eff * l, EPS)) / l
+        cands = jnp.stack([
+            jnp.zeros_like(r_cont), jnp.ones_like(r_cont),
+            jnp.floor(r_cont), jnp.ceil(r_cont),
+            r_max.astype(r_cont.dtype)], axis=-1)
+        cands = jnp.clip(cands, 0, r_max[..., None].astype(r_cont.dtype))
+        vals = cands + m_eff[..., None] * rho_c[..., None] ** cands
+        take = jnp.argmin(vals, axis=-1)
+        return jnp.take_along_axis(cands, take[..., None], -1)[..., 0].astype(jnp.int32)
+
+    b = n_x.shape[0]
+    m_arr = jnp.full((b,), miss_penalty, jnp.float32)
+    r1 = argmin_geo(m_arr, jnp.full((b,), pi, jnp.float32), n_x)
+    residual = miss_penalty * jnp.float32(pi) ** r1
+    r0 = jnp.where(
+        residual > 1.0,
+        argmin_geo(residual, jnp.full((b,), nu, jnp.float32), n - n_x),
+        0)
+    return r0.astype(jnp.int32), r1

@@ -1,0 +1,59 @@
+"""Client-side estimation of the positive-indication ratio q_j (Eq. 9).
+
+Epochs of T requests; within epoch i the estimate is frozen at the value
+computed at the end of epoch i-1; at each epoch boundary:
+
+    q <- delta * (a / T) + (1 - delta) * q          (Eq. 9)
+
+where ``a`` counts positive indications observed during the epoch.  Only
+the client can do this — it sees every request, not just accessed caches.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+class QEstimator:
+    def __init__(self, horizon: int = 100, delta: float = 0.25, q0: float = 0.5):
+        self.horizon = int(horizon)
+        self.delta = float(delta)
+        self.q = float(q0)
+        self.version = 0  # bumped at every epoch boundary (cache invalidation)
+        self._count = 0
+        self._positives = 0
+        self._bootstrapped = False
+
+    def observe(self, indication: bool) -> None:
+        self._count += 1
+        self._positives += int(indication)
+        if self._count >= self.horizon:
+            frac = self._positives / self._count
+            if not self._bootstrapped:
+                # first epoch: raw average (q_{j,t} = a(0,t)/t for t <= T)
+                self.q = frac
+                self._bootstrapped = True
+            else:
+                self.q = self.delta * frac + (1.0 - self.delta) * self.q
+            self.version += 1
+            self._count = 0
+            self._positives = 0
+
+    @property
+    def value(self) -> float:
+        return self.q
+
+
+class WindowedRatio:
+    """Plain windowed ratio (used for measured FN/hit-rate reporting)."""
+
+    def __init__(self):
+        self.num = 0
+        self.den = 0
+
+    def observe(self, hit: bool) -> None:
+        self.num += int(hit)
+        self.den += 1
+
+    @property
+    def value(self) -> float:
+        return self.num / self.den if self.den else 0.0

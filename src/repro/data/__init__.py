@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLMData, Prefetcher
+
+__all__ = ["DataConfig", "SyntheticLMData", "Prefetcher"]

@@ -1,0 +1,238 @@
+"""Sharding rules: logical parameter/activation axes -> mesh PartitionSpecs.
+
+Layout (Megatron-style TP on the ``model`` axis, DP over ``data`` and the
+multi-pod ``pod`` axis, sequence-parallel residual stream):
+
+  * attention / MLP in-projections  : output dim on ``model``
+  * attention / MLP out-projections : input dim on ``model``
+  * MoE expert weights              : expert dim on ``model`` (EP)
+  * Mamba2 projections              : inner dim / heads on ``model``
+  * embeddings                      : hidden dim on ``model`` (untied) or
+                                      vocab on ``model`` (tied, small tables)
+  * residual activations            : [B, S, d] -> (dp, "model", None)
+                                      (sequence parallel between blocks)
+
+Models call :func:`shard_activation`, which is a no-op unless a launcher
+installed rules via :func:`activation_rules` — smoke tests on one device
+never touch device state.
+"""
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class MeshRules:
+    mesh: Mesh
+    data_axes: Tuple[str, ...]  # ("data",) or ("pod", "data")
+    model_axis: str = "model"
+    seq_parallel: bool = True
+
+    @property
+    def dp(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+
+_CURRENT: Optional[MeshRules] = None
+
+
+@contextmanager
+def activation_rules(rules: Optional[MeshRules]):
+    global _CURRENT
+    prev, _CURRENT = _CURRENT, rules
+    try:
+        yield
+    finally:
+        _CURRENT = prev
+
+
+def current_rules() -> Optional[MeshRules]:
+    return _CURRENT
+
+
+def shard_activation(x, kind: str):
+    r = _CURRENT
+    if r is None:
+        return x
+    if kind == "residual" and x.ndim == 3:
+        if x.shape[1] > 1 and r.seq_parallel and x.shape[1] % _axis_size(r, r.model_axis) == 0:
+            spec = P(r.dp, r.model_axis, None)
+        else:
+            spec = P(r.dp, None, None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+    return x
+
+
+def _axis_size(r: MeshRules, name: str) -> int:
+    return r.mesh.shape[name]
+
+
+def moe_constraint(x, kind: str, groups_per_row: int):
+    """Sharding constraints around the MoE dispatch buffers.
+
+    x: [G, E, cap, d] with G = batch * seq_groups.  ``expert_in`` places the
+    expert dim on the model axis (the group->expert reshard is the EP
+    all-to-all); ``expert_out`` moves the result back to group-sharded form.
+    """
+    r = _CURRENT
+    if r is None:
+        return x
+    m = r.model_axis
+    gdim = x.shape[0]
+    all_axes = tuple(r.data_axes) + ((m,) if groups_per_row % _axis_size(r, m) == 0 else ())
+    batch_axes = r.dp
+    if kind == "expert_in":
+        if x.shape[1] % _axis_size(r, m) != 0:
+            return x
+        spec = P(batch_axes, m, None, None)
+    elif kind == "expert_out":
+        spec = P(all_axes if len(all_axes) > 1 else batch_axes, None, None, None)
+    else:
+        return x
+    if gdim % _mesh_size(r.mesh, spec[0]) != 0:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def _mesh_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (path-based rules)
+# ---------------------------------------------------------------------------
+
+# leaf-name -> (rule). Axis entries are applied right-aligned to the leaf
+# rank so the same rule covers stacked ([L, ...]) and unstacked tensors.
+_PARAM_RULES = [
+    (r"embed$", ("model_if_tied", "model_if_untied")),
+    (r"unembed$", (None, "model")),
+    (r"(patch_proj|frame_proj)$", (None, None)),
+    (r"(wq|wk|wv|wg|wi)$", (None, "model")),          # in-projections [.., d, out]
+    (r"wo$", ("model", None)),                        # out-projections [.., in, d]
+    (r"router$", (None, None)),
+    (r"in_proj$", (None, "model")),
+    (r"out_proj$", ("model", None)),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"(A_log|D|dt_bias)$", ("model",)),
+    (r"norm_w$", ("model",)),
+    (r"(ln1|ln2|ln3|final_norm)$", (None,)),
+]
+
+# MoE expert tensors are 4-D stacked [L, E, d, f]: shard experts (dim 1).
+_MOE_EXPERT_RE = re.compile(r"moe.*(wg|wi|wo)$")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _validate(spec, shape, axis_sizes):
+    """Drop axis assignments whose dim isn't divisible (jit in_shardings are
+    strict, unlike with_sharding_constraint)."""
+    if axis_sizes is None:
+        return P(*spec)
+    out = []
+    for i, a in enumerate(spec):
+        if a is not None and shape[i] % axis_sizes.get(a, 1) != 0:
+            out.append(None)
+        else:
+            out.append(a)
+    return P(*out)
+
+
+def spec_for_param(path_str: str, shape, tied: bool, axis_sizes=None) -> P:
+    ndim = len(shape)
+    if _MOE_EXPERT_RE.search(path_str):
+        # [L, E, d, f] or [E, d, f]: shard experts (EP); if the expert count
+        # doesn't divide the model axis (e.g. 40 experts on 16 shards),
+        # fall back to TP inside each expert (dim -2: d for wg/wi, f for wo).
+        spec = [None] * ndim
+        e_dim, inner_dim = ndim - 3, ndim - 2
+        msize = (axis_sizes or {}).get("model", 1)
+        if shape[e_dim] % msize == 0:
+            spec[e_dim] = "model"
+        elif shape[inner_dim] % msize == 0:
+            spec[inner_dim] = "model"
+        return P(*spec)
+    for pat, rule in _PARAM_RULES:
+        if re.search(pat, path_str):
+            if rule == ("model_if_tied", "model_if_untied"):
+                spec = ["model", None] if tied else [None, "model"]
+                return _validate(spec, shape, axis_sizes)
+            axes = list(rule)
+            full = [None] * (ndim - len(axes)) + axes
+            spec = full[:ndim] if ndim >= len(axes) else axes[-ndim:]
+            return _validate(spec, shape, axis_sizes)
+    return P()  # replicate by default
+
+
+def param_pspecs(params, tied: bool = False, axis_sizes=None):
+    """PartitionSpec tree matching a parameter tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(_path_str(path), leaf.shape, tied, axis_sizes),
+        params,
+    )
+
+
+def param_shardings(mesh: Mesh, params, tied: bool = False):
+    axis_sizes = dict(mesh.shape)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, tied, axis_sizes),
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def zero1_pspecs(params, tied: bool, axis_sizes, data_axes):
+    """ZeRO-1: optimizer-state specs = param specs + the data axes folded
+    onto the first free, divisible dim.  Optimizer updates are elementwise,
+    so any layout works; sharding m/v over data removes their replication
+    (fp32 m+v for a 30B model is 244GB — replicated per data shard it
+    cannot fit 16GB HBM; sharded it does).  XLA then reduce-scatters the
+    gradients and all-gathers updated params (the ZeRO-1 schedule) on its
+    own from the output shardings."""
+    base = param_pspecs(params, tied, axis_sizes)
+    dsize = 1
+    for a in data_axes:
+        dsize *= axis_sizes.get(a, 1)
+    dax = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def upgrade(path, spec, leaf):
+        spec_l = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, s in enumerate(spec_l):
+            if s is None and leaf.shape[i] % dsize == 0 and leaf.shape[i] > 0:
+                spec_l[i] = dax
+                return P(*spec_l)
+        return P(*spec_l)  # nothing divisible: keep replicated over data
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: upgrade(path, _lookup(base, path), leaf), params)
+
+
+def _lookup(tree, path):
+    node = tree
+    for p in path:
+        key = p.key if hasattr(p, "key") else p.idx
+        node = node[key]
+    return node

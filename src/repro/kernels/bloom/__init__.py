@@ -1,0 +1,4 @@
+from repro.kernels.bloom.ops import bloom_probe, build_indicator
+from repro.kernels.bloom.ref import bloom_probe_ref, build_indicator_ref
+
+__all__ = ["bloom_probe", "build_indicator", "bloom_probe_ref", "build_indicator_ref"]

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: batched Bloom-filter probe.
+
+HARDWARE ADAPTATION (see DESIGN.md): a Bloom probe is a random gather —
+hostile to TPU vector memory.  Instead of gathering, each probe extracts
+its byte with a blocked iota-compare + select-reduce over the byte-packed
+bitmap held in VMEM (regular, fully vectorised VPU work; no scatter/gather
+unit needed).  Cost is O(k * m_bytes) compares per key block — the right
+trade below ~1M filter bits, where the whole row fits in VMEM and compares
+are cheaper than an HBM-latency-bound gather chain.
+
+Grid: (key_blocks, n_caches).  Block shapes:
+  keys   [KB]           (KB = 256 keys)
+  bits   [1, m_bytes]   (whole filter row resident in VMEM)
+  out    [KB, 1]        (int8 indications)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bloom.ref import U, _mix32
+
+DEFAULT_KEY_BLOCK = 256
+BYTE_BLOCK = 2048
+
+
+def _probe_kernel(seeds_ref, keys_ref, bits_ref, out_ref, *, k: int, m: int):
+    j = pl.program_id(1)
+    seed = seeds_ref[j]
+    keys = keys_ref[...].astype(U)
+    kb = keys.shape[0]
+    mbytes = bits_ref.shape[1]
+
+    h1 = _mix32(keys ^ (seed.astype(U) * U(0x9E3779B9)))
+    h2 = _mix32(keys ^ U(0x85EBCA6B)) | U(1)
+
+    acc = jnp.ones((kb,), jnp.int32)
+    for probe in range(k):  # k is small and static: unrolled
+        idx = (h1 + U(probe) * h2) % U(m)
+        byte_idx = (idx >> U(3)).astype(jnp.int32)   # [KB]
+        bit = (idx & U(7)).astype(jnp.int32)
+
+        def body(wb, val):
+            start = wb * BYTE_BLOCK
+            block = pl.load(bits_ref, (0, pl.dslice(start, BYTE_BLOCK)))
+            block = block.astype(jnp.int32)          # [BB]
+            lanes = start + jax.lax.broadcasted_iota(jnp.int32, (1, BYTE_BLOCK), 1)
+            sel = jnp.where(byte_idx[:, None] == lanes, block[None, :], 0)
+            return val + jnp.sum(sel, axis=1)        # [KB]
+
+        nblocks = mbytes // BYTE_BLOCK
+        byte_val = jax.lax.fori_loop(0, nblocks, body, jnp.zeros((kb,), jnp.int32))
+        hit = (byte_val >> bit) & 1
+        acc = acc * hit
+    out_ref[...] = acc.astype(jnp.int8)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "key_block", "interpret"))
+def bloom_probe_pallas(bits, keys, seeds, *, k: int, key_block: int = DEFAULT_KEY_BLOCK,
+                       interpret: bool = True):
+    """bits: [n, m_bytes] uint8 (m_bytes % 2048 == 0); keys: [B] int32/uint32;
+    seeds: [n] int32.  Returns [B, n] int8 indications."""
+    n, mbytes = bits.shape
+    b = keys.shape[0]
+    assert b % key_block == 0, (b, key_block)
+    assert mbytes % BYTE_BLOCK == 0, mbytes
+    m = mbytes * 8
+    grid = (b // key_block, n)
+    kernel = functools.partial(_probe_kernel, k=k, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i, j: (0,)),               # seeds (small)
+            pl.BlockSpec((key_block,), lambda i, j: (i,)),       # keys block
+            pl.BlockSpec((1, mbytes), lambda i, j: (j, 0)),      # one filter row
+        ],
+        out_specs=pl.BlockSpec((key_block, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int8),
+        interpret=interpret,
+    )(seeds, keys, bits)

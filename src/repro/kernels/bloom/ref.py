@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the batched Bloom-probe kernel.
+
+Hash family: 32-bit double hashing (two finalizer-mixed streams), chosen so
+the SAME arithmetic runs on TPU vector units (the host-side CBF bookkeeping
+in repro.core.indicator uses splitmix64; the device router builds its own
+bitmaps with THIS family via build_indicator_ref, so the two layers are
+each internally consistent).
+
+Bitmaps are byte-packed: ``bits[n_caches, m_bytes]`` uint8, bit ``i`` of
+the filter lives at byte ``i >> 3``, lane ``i & 7``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+U = jnp.uint32
+
+
+def _mix32(x):
+    """murmur3-style 32-bit finalizer (uint32 lanes)."""
+    x = x.astype(U)
+    x = x ^ (x >> U(16))
+    x = x * U(0x7FEB352D)
+    x = x ^ (x >> U(15))
+    x = x * U(0x846CA68B)
+    x = x ^ (x >> U(16))
+    return x
+
+
+def hash_idx(keys, k: int, m: int, seed: int = 0):
+    """[B, k] uint32 bit indices via double hashing."""
+    keys = keys.astype(U)
+    h1 = _mix32(keys ^ U(seed * 0x9E3779B9 & 0xFFFFFFFF))
+    h2 = _mix32(keys ^ U(0x85EBCA6B)) | U(1)
+    i = jnp.arange(k, dtype=U)
+    return (h1[:, None] + i[None, :] * h2[:, None]) % U(m)
+
+
+def build_indicator_ref(keys, m: int, k: int, seed: int = 0):
+    """Byte-packed bitmap [m_bytes] uint8 from a key set (m % 8 == 0)."""
+    idx = hash_idx(keys, k, m, seed).reshape(-1)
+    bits01 = jnp.zeros((m,), jnp.uint8).at[idx].set(1)
+    lanes = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return (bits01.reshape(m // 8, 8) * lanes[None, :]).sum(
+        axis=1, dtype=jnp.uint32).astype(jnp.uint8)
+
+
+def bloom_probe_ref(bits, keys, k: int, seeds=None):
+    """bits: [n, m_bytes] uint8; keys: [B] -> indications [B, n] int8.
+
+    ``seeds``: per-cache hash seeds (defaults to cache index).
+    """
+    n, mbytes = bits.shape
+    m = mbytes * 8
+    seeds = seeds if seeds is not None else list(range(n))
+    outs = []
+    for j in range(n):
+        idx = hash_idx(keys, k, m, seeds[j])          # [B, k]
+        byte = (idx >> U(3)).astype(jnp.int32)
+        bit = (idx & U(7)).astype(jnp.uint8)
+        vals = bits[j][byte]                          # [B, k] uint8
+        hit = (vals >> bit) & jnp.uint8(1)
+        outs.append(jnp.all(hit == 1, axis=1))
+    return jnp.stack(outs, axis=1).astype(jnp.int8)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: causal flash-attention forward with GQA.
+
+Grid (B, Hq, nQ, nK) — the KV dim is innermost, so each (b, h, iq) row
+iterates its KV blocks SEQUENTIALLY (TPU grids are sequential), carrying
+the online-softmax statistics in VMEM scratch:
+
+  m   [Bq, 1]  running max
+  l   [Bq, 1]  running denominator
+  acc [Bq, D]  running numerator (f32)
+
+Causal skipping: KV blocks strictly above the diagonal are predicated off
+with ``pl.when`` — the memory traffic for those blocks is still issued by
+the pipeline but no FLOPs are burned (a production variant would shrink
+the grid per-row; noted as a hillclimb lever in EXPERIMENTS.md §Perf).
+
+BlockSpecs put q/k/v tiles in VMEM with the MXU-aligned last dim D
+(64/128) and the GQA mapping folds the query-head index to its KV head
+(h // group) in the index_map — no repeated-KV materialisation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, causal: bool, scale: float):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        run = ik * block_k <= iq * block_q + block_q - 1
+    else:
+        run = ik >= 0  # always true (traced)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [Bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [Bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)                  # [Bk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [Bq, Bk]
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                                   # [Bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                                # [Bq, Bk]
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = True):
+    """q: [B,Hq,Sq,D]; k/v: [B,Hkv,Sk,D] (head-major) -> [B,Hq,Sq,D]."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    grid = (b, hq, sq // block_q, sk // block_k)
+    scale = d ** -0.5
+    kernel = functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                               causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            # (m, l, acc) carried across the KV grid dim
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,19 @@
+"""Jitted wrapper: layout shim [B,S,H,D] <-> [B,H,S,D] + backend select."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """q: [B,Sq,Hq,D]; k/v: [B,Sk,Hkv,D] — model layout — returns same."""
+    interpret = jax.default_backend() == "cpu"
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_pallas(qt, kt, vt, causal=causal, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import attention_naive
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: [B,Sq,Hq,D]; k/v: [B,Sk,Hkv,D] -> [B,Sq,Hq,D]."""
+    return attention_naive(q, k, v, causal=causal)

@@ -1,0 +1,4 @@
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+
+__all__ = ["ssd_scan", "ssd_ref"]

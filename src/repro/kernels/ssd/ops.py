@@ -1,0 +1,12 @@
+"""Jitted wrapper for the SSD kernel with backend auto-select."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd_pallas
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128):
+    """Drop-in for models.ssm.ssd_chunked's (y, final_state) contract."""
+    interpret = jax.default_backend() == "cpu"
+    return ssd_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)

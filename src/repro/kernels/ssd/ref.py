@@ -1,0 +1,10 @@
+"""Oracle for the SSD kernel: the sequential Mamba2 recurrence."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_reference
+
+
+def ssd_ref(x, dt, A, B, C, *, initial_state=None):
+    """x: [b,s,h,p]; dt: [b,s,h]; A: [h]; B/C: [b,s,n].
+    Returns (y [b,s,h,p], final_state [b,h,p,n])."""
+    return ssd_reference(x, dt, A, B, C, initial_state=initial_state)

@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  This module is the ONLY place that forces 512
+# placeholder devices — smoke tests and benches see the real 1-CPU world.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract roofline inputs from the compiled artifact.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+
+Each cell writes ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` with
+memory analysis, cost analysis, and per-collective byte counts.  Failures
+here (sharding mismatch, OOM at compile, unsupported collective) are bugs
+in the framework — the sweep fails loudly.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES_BY_NAME, cells, get_config, get_shape
+from repro.distributed.sharding import activation_rules, param_pspecs
+from repro.launch import hlo_cost
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import Roofline, essential_bytes, model_flops
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model, input_specs
+from repro.optim import OptConfig, init_train_state, make_train_step
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _mem_analysis(compiled):
+    ma = compiled.memory_analysis()
+    out = {}
+    for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes", "alias_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if not out and ma is not None:
+        out["repr"] = str(ma)
+    return out
+
+
+def _ns_tree(mesh, pspec_tree):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str,
+               serve_bf16: bool = False, kv_quant: bool = False):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if serve_bf16 and shape_name.startswith(("decode", "long", "prefill")):
+        # production serving stores weights in the compute dtype
+        cfg = _dc.replace(cfg, param_dtype="bfloat16")
+    if kv_quant and shape_name.startswith(("decode", "long")):
+        cfg = _dc.replace(cfg, kv_quant=True)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    model = get_model(cfg)
+    rules = S.make_rules(mesh, cfg)
+    sp = input_specs(cfg, shape)
+
+    with mesh:
+        with activation_rules(rules):
+            if shape.kind == "train":
+                ocfg = OptConfig()
+                step = make_train_step(model, ocfg)
+                state_sds = jax.eval_shape(
+                    lambda: init_train_state(model.init(jax.random.PRNGKey(0)), ocfg))
+                state_sh = S.state_shardings(mesh, cfg, state_sds)
+                batch_sh = S.batch_shardings(mesh, cfg, sp["batch"])
+                jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                                 out_shardings=(state_sh, None),
+                                 donate_argnums=(0,))
+                lowered = jitted.lower(state_sds, sp["batch"])
+            elif shape.kind == "prefill":
+                params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+                params_sh = _ns_tree(mesh, param_pspecs(params_sds, cfg.tie_embeddings, dict(mesh.shape)))
+                batch_sh = S.batch_shardings(mesh, cfg, sp["batch"])
+
+                def prefill_step(params, batch):
+                    return model.prefill(params, batch)
+
+                jitted = jax.jit(prefill_step, in_shardings=(params_sh, batch_sh))
+                lowered = jitted.lower(params_sds, sp["batch"])
+            else:  # decode
+                params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+                params_sh = _ns_tree(mesh, param_pspecs(params_sds, cfg.tie_embeddings, dict(mesh.shape)))
+                cache_sh = S.cache_shardings(mesh, cfg, sp["cache"], shape)
+                tok_sh = S.token_shardings(mesh, shape)
+
+                def serve_step(params, cache, tokens):
+                    return model.decode_step(params, cache, tokens)
+
+                jitted = jax.jit(serve_step,
+                                 in_shardings=(params_sh, cache_sh, tok_sh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(params_sds, sp["cache"], sp["tokens"])
+    return cfg, shape, mesh, lowered
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             dump_hlo: bool = False, serve_bf16: bool = False,
+             kv_quant: bool = False) -> dict:
+    t0 = time.time()
+    cfg, shape, mesh, lowered = lower_cell(arch, shape_name, mesh_kind,
+                                           serve_bf16=serve_bf16,
+                                           kv_quant=kv_quant)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_analysis(compiled)
+    print(f"memory_analysis: {mem}")
+    cost = dict(compiled.cost_analysis() or {})
+    print(f"cost_analysis (loops-once): flops={cost.get('flops')} "
+          f"bytes={cost.get('bytes accessed')}")
+    hlo = compiled.as_text()
+    la = hlo_cost.analyze(hlo)  # loop-aware: multiplies scan trip counts
+    chips = mesh.devices.size
+
+    rl = Roofline(
+        flops_per_device=la["flops"],
+        hbm_bytes_per_device=la["bytes"],
+        collective_bytes_per_device=la["collective_bytes"],
+        chips=chips,
+        model_flops_total=model_flops(cfg, shape),
+    )
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_flops_loops_once": float(cost.get("flops", 0.0)),
+        "cost_bytes_loops_once": float(cost.get("bytes accessed", 0.0)),
+        "collectives": la["collectives"],
+        "roofline": rl.to_dict(),
+        "essential_bytes_per_device": essential_bytes(cfg, shape, chips),
+        "attn_score_bytes": la.get("attn_score_bytes", 0.0),
+        "convert_bytes": la.get("convert_bytes", 0.0),
+        "hlo_bytes": len(hlo),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    if dump_hlo:
+        (out_dir / f"{arch}__{shape_name}__{mesh_kind}.hlo.txt").write_text(hlo)
+    print(f"[dryrun] OK {arch} x {shape_name} x {mesh_kind}: "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+          f"bottleneck={rl.bottleneck} t=({rl.t_compute:.4f},{rl.t_memory:.4f},"
+          f"{rl.t_collective:.4f})s -> {path.name}")
+    return rec
+
+
+def sweep(mesh_kinds, force: bool, out_dir: Path):
+    """Run every applicable cell in a fresh subprocess (clean device state,
+    bounded compiler memory); resumable — existing JSONs are skipped."""
+    todo = []
+    for arch, shape_name in cells():
+        for mk in mesh_kinds:
+            path = out_dir / f"{arch}__{shape_name}__{mk}.json"
+            if path.exists() and not force:
+                continue
+            todo.append((arch, shape_name, mk))
+    print(f"[dryrun] {len(todo)} cells to run")
+    failures = []
+    for i, (arch, shape_name, mk) in enumerate(todo):
+        print(f"[dryrun] ({i+1}/{len(todo)}) {arch} x {shape_name} x {mk}")
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape_name, "--mesh", mk, "--out", str(out_dir)],
+            capture_output=True, text=True)
+        if r.returncode != 0:
+            failures.append((arch, shape_name, mk))
+            print(f"[dryrun] FAIL {arch} x {shape_name} x {mk}\n{r.stdout[-2000:]}\n{r.stderr[-4000:]}")
+        else:
+            print(r.stdout.strip().splitlines()[-1] if r.stdout.strip() else "")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}")
+        sys.exit(1)
+    print("[dryrun] sweep complete, all cells green")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--dump-hlo", action="store_true")
+    ap.add_argument("--serve-bf16", action="store_true",
+                    help="store serving weights in bf16 (production default; "
+                         "kept off for the baseline table)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache for decode cells (§Perf C3)")
+    ap.add_argument("--out", default=str(ART))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        sweep(mesh_kinds, args.force, out_dir)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    for mk in mesh_kinds:
+        run_cell(args.arch, args.shape, mk, out_dir, args.dump_hlo,
+                 serve_bf16=args.serve_bf16, kv_quant=args.kv_quant)
+
+
+if __name__ == "__main__":
+    main()

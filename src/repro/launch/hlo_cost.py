@@ -1,0 +1,406 @@
+"""Loop-aware cost model over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE, but our
+models ``lax.scan`` over layers / query chunks / loss chunks, so its FLOP
+and byte numbers undercount by orders of magnitude.  This module re-derives
+roofline inputs from ``compiled.as_text()`` with trip-count multiplication:
+
+  * FLOPs           — every ``dot`` op: 2 x numel(result) x prod(contracting)
+  * HBM bytes       — per materialising op: result + operand bytes
+                      (post-fusion HLO only materialises fusion/dot/copy/...
+                      boundaries, so this is a fair HBM-traffic model)
+  * collective bytes— operand bytes per all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute
+
+All three multiply through the while-loop nest (trip counts recovered from
+each loop condition's comparison constant).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:condition|body|calls|to_apply|branch_computations)=\{?%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIVIAL = {"get-tuple-element", "tuple", "bitcast", "parameter", "constant",
+            "iota", "after-all", "partition-id", "replica-id"}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute", "ragged-all-to-all")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    tot = 0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    rest: str  # text after the opcode
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # op name -> result type
+
+
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+# opcode appears right before '(' in the defining expression
+_KIND_RE = re.compile(r"([\w\-]+)\(")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(1))
+            continue
+        if line.strip() == "}" or line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, expr = m.group(1), m.group(2)
+        # split result type from op expression: type is everything up to the
+        # opcode token; find opcode as the token immediately preceding '('.
+        km = _KIND_RE.search(expr)
+        if not km:
+            continue
+        kind = km.group(1)
+        result_type = expr[: km.start()].strip()
+        rest = expr[km.end() - 1:]
+        cur.ops.append(Op(name, kind, result_type, rest))
+        cur.symbols[name] = result_type
+    return comps
+
+
+def _entry_name(comps: Dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    # fallback: computation that is not referenced by any other
+    referenced = set()
+    for c in comps.values():
+        for op in c.ops:
+            for cm in _CALLED_RE.finditer(op.rest):
+                referenced.add(cm.group(1))
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def _constant_value(comp: Computation, ref: str) -> Optional[int]:
+    for op in comp.ops:
+        if op.name == ref and op.kind == "constant":
+            # op.rest holds the args after the opcode, e.g. "(12)"
+            m = re.match(r"\((-?\d+)\)", op.rest.strip())
+            if m:
+                return int(m.group(1))
+    return None
+
+
+def trip_count(cond: Computation) -> int:
+    """Recover the loop trip count from the condition computation."""
+    for op in cond.ops:
+        if op.kind == "compare":
+            refs = _OPERAND_RE.findall(op.rest)
+            for r in refs:
+                v = _constant_value(cond, r)
+                if v is not None and v > 0:
+                    return v
+    # fallback: the largest positive integer constant in the computation
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.match(r"\((\d+)\)", op.rest.strip())
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.collectives.items()})
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
+    res_elems = 0
+    for dt, dims in _shape_list(op.result_type):
+        n = 1
+        for d in dims:
+            n *= d
+        res_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    # lhs operand = first %ref inside the parens
+    paren = op.rest[op.rest.find("("):]
+    refs = _OPERAND_RE.findall(paren)
+    k = 1
+    if refs and cdims:
+        lhs_type = symbols.get(refs[0], "")
+        shapes = _shape_list(lhs_type)
+        if shapes:
+            dims = shapes[0][1]
+            for c in cdims:
+                if c < len(dims):
+                    k *= dims[c]
+    return 2.0 * res_elems * k
+
+
+def _operand_refs(op: Op) -> List[str]:
+    paren = op.rest[op.rest.find("("):]
+    head = paren.split("metadata=")[0]
+    for marker in (", kind=", ", calls=", ", condition=", ", channel_id="):
+        head = head.split(marker)[0]
+    return _OPERAND_RE.findall(head)
+
+
+def _op_bytes(op: Op, symbols: Dict[str, str],
+              comps: Optional[Dict[str, "Computation"]] = None) -> float:
+    refs = _operand_refs(op)
+    operand_bytes = [(r, float(_bytes_of(symbols.get(r, "")))) for r in refs]
+    result_bytes = float(_bytes_of(op.result_type))
+
+    if op.kind == "dynamic-update-slice":
+        # in-place: read+write the updated slice only (operand 1)
+        upd = operand_bytes[1][1] if len(operand_bytes) > 1 else 0.0
+        return 2.0 * upd
+    if op.kind == "dynamic-slice":
+        return 2.0 * result_bytes  # read slice + write result
+
+    if op.kind == "fusion" and comps is not None:
+        cm = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+        fc = comps.get(cm.group(1)) if cm else None
+        root = None
+        if fc is not None:
+            for o in fc.ops:
+                root = o  # last op is ROOT in printed HLO
+            if root is not None and root.kind == "dynamic-update-slice":
+                # in-place updating fusion: reads = non-aliased operands,
+                # writes = the updated slice.
+                rrefs = _operand_refs(root)
+                update_b = float(_bytes_of(fc.symbols.get(rrefs[1], ""))) if len(rrefs) > 1 else 0.0
+                total = sum(b for _, b in operand_bytes) + update_b
+                # subtract the aliased buffer operand (param index of root operand 0)
+                pm = re.match(r"param_(\d+)", rrefs[0]) if rrefs else None
+                if pm and int(pm.group(1)) < len(operand_bytes):
+                    total -= operand_bytes[int(pm.group(1))][1]
+                else:
+                    for _, b in operand_bytes:
+                        if b == result_bytes:
+                            total -= b
+                            break
+                return max(total, 0.0)
+        return result_bytes + sum(b for _, b in operand_bytes)
+
+    return result_bytes + sum(b for _, b in operand_bytes)
+
+
+def _collective_operand_bytes(op: Op, symbols: Dict[str, str]) -> float:
+    paren = op.rest[op.rest.find("("):].split("metadata=")[0]
+    refs = _OPERAND_RE.findall(paren.split("),")[0] + ")")
+    tot = 0.0
+    for r in refs:
+        t = symbols.get(r)
+        if t:
+            tot += _bytes_of(t)
+    if tot == 0.0:
+        tot = float(_bytes_of(op.result_type))
+    return tot
+
+
+def comp_cost(comps: Dict[str, Computation], name: str,
+              memo: Dict[str, Cost]) -> Cost:
+    if name in memo:
+        return memo[name]
+    memo[name] = Cost()  # cycle guard
+    c = comps.get(name)
+    if c is None:
+        return memo[name]
+    total = Cost()
+    for op in c.ops:
+        if op.kind == "while":
+            cm = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+            bm = re.search(r"body=%?([\w\.\-]+)", op.rest)
+            if cm and bm:
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+                if tm:
+                    n = int(tm.group(1))
+                else:
+                    n = trip_count(comps[cm.group(1)]) if cm.group(1) in comps else 1
+                body = comp_cost(comps, bm.group(1), memo)
+                total += body.scaled(max(n, 1))
+                # while-carried buffer traffic is inside the body already
+            continue
+        if op.kind in ("call", "conditional", "async-start"):
+            for cm in _CALLED_RE.finditer(op.rest):
+                total += comp_cost(comps, cm.group(1), memo)
+            continue
+        base_kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+        if base_kind in COLLECTIVE_KINDS:
+            b = _collective_operand_bytes(op, c.symbols)
+            total += Cost(0.0, b, {base_kind: b})
+            continue
+        if op.kind == "fusion":
+            # boundary traffic for the fusion + any dots fused INSIDE it
+            # (XLA:CPU root-fuses small dots)
+            dflops = 0.0
+            cm = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+            fc = comps.get(cm.group(1)) if cm else None
+            if fc is not None:
+                for o in fc.ops:
+                    if o.kind == "dot":
+                        dflops += _dot_flops(o, fc.symbols)
+            total += Cost(dflops, _op_bytes(op, c.symbols, comps), {})
+            continue
+        if op.kind == "dot":
+            total += Cost(_dot_flops(op, c.symbols), _op_bytes(op, c.symbols, comps), {})
+            continue
+        if op.kind in _TRIVIAL:
+            continue
+        # other materialising ops (copy, reduce, dynamic-slice, DUS, ...)
+        total += Cost(0.0, _op_bytes(op, c.symbols, comps), {})
+    memo[name] = total
+    return total
+
+
+def top_ops(text: str, n: int = 15) -> List[Tuple[float, str, str, str]]:
+    """Top byte-contributing ops with loop multipliers (debug/hillclimb aid)."""
+    comps = parse_module(text)
+    entry = _entry_name(comps, text)
+    rows: List[Tuple[float, str, str, str]] = []
+
+    def walk(name: str, mult: float):
+        c = comps.get(name)
+        if c is None:
+            return
+        for op in c.ops:
+            if op.kind == "while":
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+                k = int(tm.group(1)) if tm else 1
+                bm = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                if bm:
+                    walk(bm.group(1), mult * max(k, 1))
+                continue
+            if op.kind in ("call", "conditional"):
+                for cm in _CALLED_RE.finditer(op.rest):
+                    walk(cm.group(1), mult)
+                continue
+            if op.kind in _TRIVIAL:
+                continue
+            rows.append((_op_bytes(op, c.symbols, comps) * mult, name, op.kind,
+                         f"{op.name} :: {op.result_type[:70]}"))
+
+    walk(entry, 1.0)
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]
+
+
+def attribute_bytes(text: str, patterns: Dict[str, str]) -> Dict[str, float]:
+    """Loop-aware byte attribution: for each named regex, sum bytes of ops
+    whose NAME or metadata op_name matches.  Used by §Perf to quantify
+    (a) attention-score traffic the Pallas flash kernel removes on TPU and
+    (b) dtype-convert traffic that is a CPU-backend artifact."""
+    comps = parse_module(text)
+    entry = _entry_name(comps, text)
+    res = {name: 0.0 for name in patterns}
+    regs = {name: re.compile(pat) for name, pat in patterns.items()}
+
+    def walk(name: str, mult: float):
+        c = comps.get(name)
+        if c is None:
+            return
+        for op in c.ops:
+            if op.kind == "while":
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+                k = int(tm.group(1)) if tm else 1
+                bm = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                if bm:
+                    walk(bm.group(1), mult * max(k, 1))
+                continue
+            if op.kind in ("call", "conditional"):
+                for cm in _CALLED_RE.finditer(op.rest):
+                    walk(cm.group(1), mult)
+                continue
+            if op.kind in _TRIVIAL:
+                continue
+            hay = op.name + " " + op.rest
+            for pname, rg in regs.items():
+                if rg.search(hay):
+                    res[pname] += _op_bytes(op, c.symbols, comps) * mult
+                    break
+
+    walk(entry, 1.0)
+    return res
+
+
+# Patterns for the standard attributions (op names + jax op_name metadata).
+ATTN_SCORE_PAT = (r"bhgqk|bqhgd|softmax|reduce_max|subtract_exponential|"
+                  r"broadcast_divide|exponential")
+CONVERT_PAT = r"convert"
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps = parse_module(text)
+    entry = _entry_name(comps, text)
+    cost = comp_cost(comps, entry, {})
+    colls = {k: cost.collectives.get(k, 0.0) for k in COLLECTIVE_KINDS}
+    attr = attribute_bytes(text, {"attention_score": ATTN_SCORE_PAT,
+                                  "dtype_convert": CONVERT_PAT})
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": sum(colls.values()),
+        "collectives": colls,
+        "attn_score_bytes": attr["attention_score"],
+        "convert_bytes": attr["dtype_convert"],
+        "entry": entry,
+        "n_computations": len(comps),
+    }

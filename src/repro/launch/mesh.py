@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (smoke tests and benches must see 1 device).
+
+Single pod: 16x16 = 256 chips ("data", "model").
+Multi-pod:  2x16x16 = 512 chips ("pod", "data", "model") — the "pod" axis
+is a second data-parallel dimension spanning the (slower) inter-pod links.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)}. "
+            "Set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (dryrun.py does this for you).")
+    try:
+        return jax.make_mesh(shape, axes, devices=devices[:n])
+    except TypeError:  # older jax without the devices kwarg
+        import numpy as np
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def data_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

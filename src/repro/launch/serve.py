@@ -1,0 +1,98 @@
+"""Serving launcher: model engine + FNA prefix-cache routing tier.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+      --requests 200 --policy fna_cal
+
+On a pod, the same entry point runs the engine under the production mesh
+(decode shardings from launch/specs.py) with one router process per
+front-end; here it drives the full data path single-host: route -> probe ->
+(hit: reuse prefix KV | miss: real prefill) -> decode -> place.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--policy", default="fna_cal",
+                    choices=["fna", "fna_cal", "fno", "pi"])
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--node-capacity", type=int, default=64)
+    ap.add_argument("--update-interval", type=int, default=32)
+    ap.add_argument("--miss-penalty", type=float, default=40.0)
+    ap.add_argument("--prefix-len", type=int, default=24)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 prefix-KV caches (see EXPERIMENTS.md §Perf C3)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.cachesim.traces import recency_trace
+    from repro.configs import get_config
+    from repro.serving import ClusterConfig, PrefixServeCluster, ServeEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.kv_quant and cfg.family in ("dense", "moe", "vlm"):
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    engine = ServeEngine(cfg)
+    rng = np.random.default_rng(args.seed)
+    prefixes = [rng.integers(0, cfg.vocab, (1, args.prefix_len)).astype(np.int32)
+                for _ in range(256)]
+    stream = recency_trace(args.requests, p_new=0.15, window=96,
+                           seed=args.seed + 1)
+
+    ccfg = ClusterConfig(n_nodes=args.nodes, node_capacity=args.node_capacity,
+                         update_interval=args.update_interval,
+                         miss_penalty=args.miss_penalty, policy=args.policy)
+    cluster = PrefixServeCluster(ccfg, seed=args.seed)
+    max_len = args.prefix_len + args.decode_steps + 2
+
+    t0 = time.time()
+    prefill_s = 0.0
+    tokens_out = 0
+    for i in range(args.requests):
+        pid = int(stream[i])
+        toks = prefixes[pid % len(prefixes)]
+
+        def make_kv():
+            nonlocal prefill_s
+            t1 = time.time()
+            _, c = engine.prefill(toks, max_len=max_len)
+            prefill_s += time.time() - t1
+            return c
+
+        kv, cost = cluster.request(pid, make_kv=make_kv)
+        first = jnp.zeros((toks.shape[0],), jnp.int32)
+        out, _ = engine.decode(kv, first, args.decode_steps)
+        tokens_out += out.size
+        if (i + 1) % 50 == 0:
+            s = cluster.stats
+            print(f"[serve] {i + 1:5d} reqs  mean-cost {s.mean_cost:7.2f}  "
+                  f"kv-hit {s.hit_ratio:.3f}  prefills {s.prefills}  "
+                  f"neg-probes {s.neg_probes}")
+    wall = time.time() - t0
+    s = cluster.stats
+    print(f"[serve] policy={args.policy} requests={s.requests} "
+          f"mean-cost={s.mean_cost:.2f} hit={s.hit_ratio:.3f} "
+          f"prefills={s.prefills} neg_probes={s.neg_probes} "
+          f"tok/s={tokens_out / wall:,.0f} wall={wall:.1f}s "
+          f"(prefill {prefill_s:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,101 @@
+"""Per-(arch, shape, mesh) sharding specs for the dry-run and launchers."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import MeshRules, param_pspecs
+from repro.launch.mesh import data_axes
+
+PyTree = Any
+
+
+def _dp(mesh) -> Any:
+    ax = data_axes(mesh)
+    return ax if len(ax) > 1 else ax[0]
+
+
+def _ns(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def state_shardings(mesh: Mesh, cfg: ModelConfig, state_specs: PyTree) -> PyTree:
+    """TrainState sharding: params follow the TP rules; optimizer states
+    (m/v/ef) additionally shard over the data axes (ZeRO-1); step replicated."""
+    from repro.distributed.sharding import zero1_pspecs
+
+    axis_sizes = dict(mesh.shape)
+    daxes = data_axes(mesh)
+    out = {}
+    for key, sub in state_specs.items():
+        if key == "step":
+            out[key] = _ns(mesh, P())
+        elif key in ("m", "v", "ef"):
+            pspecs = zero1_pspecs(sub, cfg.tie_embeddings, axis_sizes, daxes)
+            out[key] = jax.tree.map(lambda s: _ns(mesh, s), pspecs,
+                                    is_leaf=lambda s: isinstance(s, P))
+        else:
+            pspecs = param_pspecs(sub, tied=cfg.tie_embeddings, axis_sizes=axis_sizes)
+            out[key] = jax.tree.map(lambda s: _ns(mesh, s), pspecs,
+                                    is_leaf=lambda s: isinstance(s, P))
+    return out
+
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, batch_specs: PyTree) -> PyTree:
+    dp = _dp(mesh)
+
+    def spec(name, sds):
+        if sds.ndim == 2:
+            return _ns(mesh, P(dp, None))
+        return _ns(mesh, P(dp, None, None))  # patch_embeds / frames
+
+    return {k: spec(k, v) for k, v in batch_specs.items()}
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache_specs: PyTree,
+                    shape: ShapeConfig) -> PyTree:
+    """Decode caches.
+
+    KV caches shard the *sequence* dim on "model" (always divisible; XLA
+    partitions the masked-softmax reduction into the flash-decode pattern:
+    local partial scores + tiny stat all-reduces).  Batch shards on the data
+    axes.  For B=1 (long_500k) the sequence spreads over EVERY mesh axis and
+    SSM states shard their heads on "model".
+    """
+    dp = _dp(mesh)
+    b = shape.global_batch
+    single_seq = b == 1
+    all_axes = tuple(mesh.axis_names)
+
+    def spec(path, sds):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v", "ck", "cv"):
+            # [L_or_apps, B, S, Hkv, Dh]
+            if single_seq:
+                return _ns(mesh, P(None, None, all_axes, None, None))
+            return _ns(mesh, P(None, dp, "model", None, None))
+        if name in ("k_s", "v_s"):  # int8-KV scales [L, B, S, Hkv]
+            if single_seq:
+                return _ns(mesh, P(None, None, all_axes, None))
+            return _ns(mesh, P(None, dp, "model", None))
+        if name == "state":  # [L, B, H, Pd, N]
+            return _ns(mesh, P(None, None if single_seq else dp, "model", None, None))
+        if name == "conv":  # [L, B, W-1, conv_dim]
+            return _ns(mesh, P(None, None if single_seq else dp, None, "model"))
+        return _ns(mesh, P())  # len
+
+    return jax.tree_util.tree_map_with_path(spec, cache_specs)
+
+
+def token_shardings(mesh: Mesh, shape: ShapeConfig) -> NamedSharding:
+    dp = _dp(mesh)
+    return _ns(mesh, P(dp) if shape.global_batch > 1 else P())
+
+
+def make_rules(mesh: Mesh, cfg: ModelConfig) -> MeshRules:
+    return MeshRules(mesh=mesh, data_axes=data_axes(mesh),
+                     seq_parallel=cfg.seq_parallel)

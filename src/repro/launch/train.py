@@ -1,0 +1,149 @@
+"""Production training launcher.
+
+Single-host CPU example (runs today):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On a pod the same entry point runs under the production mesh (--mesh pod)
+with the dry-run's shardings; jax.distributed.initialize() is called when
+the scheduler environment provides coordinator addresses.
+
+Fault-tolerance drill:
+  * SIGTERM mid-run -> checkpoint + exit code 42 (scheduler restarts with
+    --resume and training continues bit-exactly: data stream is a pure
+    function of the step counter).
+  * --kill-at N simulates a preemption at step N (used by tests).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, latest_step, restore
+from repro.configs import get_config
+from repro.data import DataConfig, Prefetcher, SyntheticLMData
+from repro.distributed.ft import PreemptionHandler, StepTimer, elastic_mesh
+from repro.distributed.sharding import activation_rules, param_shardings
+from repro.models import get_model
+from repro.optim import OptConfig, init_train_state, make_train_step
+
+EXIT_PREEMPTED = 42
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = get_model(cfg)
+    ocfg = OptConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                     total_steps=args.steps,
+                     compression="int8_ef" if args.compress_grads else "none")
+    data = SyntheticLMData(DataConfig(batch=args.batch, seq=args.seq,
+                                      vocab=min(cfg.vocab, 256), seed=args.seed),
+                           model_cfg=cfg)
+    return cfg, model, ocfg, data
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh", default="none", choices=["none", "elastic"])
+    ap.add_argument("--model-dim", type=int, default=1)
+    ap.add_argument("--kill-at", type=int, default=-1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, model, ocfg, data = build(args)
+    train_step = make_train_step(model, ocfg)
+
+    mesh = None
+    shardings = None
+    if args.mesh == "elastic":
+        mesh = elastic_mesh(model_dim=args.model_dim)
+        print(f"[train] elastic mesh: {dict(mesh.shape)}")
+
+    rng = jax.random.PRNGKey(args.seed)
+    state_abs = jax.eval_shape(lambda: init_train_state(model.init(rng), ocfg))
+    if mesh is not None:
+        shardings = {
+            k: (param_shardings(mesh, v, cfg.tie_embeddings)
+                if k != "step" else jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))
+            for k, v in state_abs.items()}
+
+    start = 0
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state = restore(args.ckpt_dir, state_abs, shardings=shardings)
+        start = int(np.asarray(jax.device_get(state["step"])))
+        print(f"[train] resumed from step {start}")
+    else:
+        state = init_train_state(model.init(rng), ocfg)
+        if shardings is not None:
+            state = jax.device_put(state, shardings)
+
+    jit_kwargs = {"donate_argnums": (0,)}
+    if shardings is not None:
+        jit_kwargs.update(in_shardings=(shardings, None),
+                          out_shardings=(shardings, None))
+    step_fn = jax.jit(train_step, **jit_kwargs)
+
+    ckpt = CheckpointManager(args.ckpt_dir, interval=args.ckpt_interval) \
+        if args.ckpt_dir else None
+    preempt = PreemptionHandler().install()
+    timer = StepTimer()
+    prefetch = Prefetcher(data.iterate(start_step=start))
+    tokens_per_step = args.batch * args.seq
+
+    try:
+        for step in range(start, args.steps):
+            if args.kill_at == step:
+                preempt.trigger()
+            if preempt.preempted:
+                if ckpt:
+                    ckpt.maybe_save(state, step, force=True)
+                    ckpt.wait()
+                print(f"[train] preempted at step {step}; checkpointed, exit {EXIT_PREEMPTED}")
+                return EXIT_PREEMPTED
+            batch = prefetch.get()
+            timer.start()
+            with activation_rules(None):
+                state, metrics = step_fn(state, batch)
+            loss = float(jax.device_get(metrics["loss"]))
+            dt = timer.stop(step)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(jax.device_get(metrics['grad_norm'])):.3f} "
+                      f"{tokens_per_step / max(dt, 1e-9):,.0f} tok/s "
+                      f"{dt * 1e3:.0f} ms")
+            if ckpt:
+                ckpt.maybe_save(state, step + 1)
+        if ckpt:
+            ckpt.maybe_save(state, args.steps, force=True)
+            ckpt.wait()
+        if timer.stragglers:
+            print(f"[train] straggler steps: {timer.stragglers}")
+        print(f"[train] done: {args.steps} steps, final loss {loss:.4f}")
+        return 0
+    finally:
+        prefetch.close()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+from repro.models.registry import (
+    batch_specs,
+    decode_specs,
+    get_model,
+    input_specs,
+    make_concrete_batch,
+)
+
+__all__ = ["get_model", "input_specs", "batch_specs", "decode_specs", "make_concrete_batch"]

@@ -1,0 +1,212 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+The speech/audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings ``[B, S_enc, d_model]`` supplied by
+``input_specs()``; everything downstream (bidirectional encoder, causal
+decoder with cross-attention, serving with self- + cross-KV caches) is real.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_activation
+from repro.models import layers as L
+from repro.models.transformer import _remat, chunked_ce_loss
+
+PyTree = Any
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pdt = L.dtype_of(cfg.param_dtype)
+        self.cdt = L.dtype_of(cfg.dtype)
+
+    # ---------------- params ----------------
+    def init(self, rng) -> PyTree:
+        cfg = self.cfg
+        k_fp, k_enc, k_emb, k_dec, k_un = jax.random.split(rng, 5)
+
+        def enc_layer(k):
+            ka, kf = jax.random.split(k)
+            return {
+                "attn": L.init_attn(ka, cfg, self.pdt),
+                "mlp": L.init_mlp(kf, cfg, self.pdt),
+                "ln1": jnp.zeros((cfg.d_model,), self.pdt),
+                "ln2": jnp.zeros((cfg.d_model,), self.pdt),
+            }
+
+        def dec_layer(k):
+            ka, kc, kf = jax.random.split(k, 3)
+            return {
+                "attn": L.init_attn(ka, cfg, self.pdt),
+                "cross": L.init_attn(kc, cfg, self.pdt),
+                "mlp": L.init_mlp(kf, cfg, self.pdt),
+                "ln1": jnp.zeros((cfg.d_model,), self.pdt),
+                "ln2": jnp.zeros((cfg.d_model,), self.pdt),
+                "ln3": jnp.zeros((cfg.d_model,), self.pdt),
+            }
+
+        return {
+            "frame_proj": L.dense_init(k_fp, (cfg.d_model, cfg.d_model), self.pdt),
+            "enc_layers": jax.vmap(enc_layer)(jax.random.split(k_enc, cfg.enc_layers)),
+            "embed": L.embed_init(k_emb, (cfg.vocab_padded, cfg.d_model), self.pdt),
+            "dec_layers": jax.vmap(dec_layer)(jax.random.split(k_dec, cfg.n_layers)),
+            "enc_norm": jnp.zeros((cfg.d_model,), self.pdt),
+            "final_norm": jnp.zeros((cfg.d_model,), self.pdt),
+            "unembed": L.dense_init(k_un, (cfg.d_model, cfg.vocab_padded), self.pdt),
+        }
+
+    # ---------------- encoder ----------------
+    def encode(self, params, frames) -> jax.Array:
+        cfg = self.cfg
+        x = frames.astype(self.cdt) @ params["frame_proj"].astype(self.cdt)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def block(h, lp):
+            h = shard_activation(h, "residual")
+            a = L.attn_forward(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                               cfg, positions, causal=False)
+            h = h + a
+            f = L.mlp_forward(lp["mlp"], L.rms_norm(h, lp["ln2"], cfg.norm_eps))
+            return h + f, None
+
+        x, _ = jax.lax.scan(_remat(block, cfg), x, params["enc_layers"])
+        return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ---------------- decoder ----------------
+    def _decoder_body(self, params, x, enc_out, positions):
+        cfg = self.cfg
+
+        def block(h, lp):
+            h = shard_activation(h, "residual")
+            a = L.attn_forward(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                               cfg, positions, causal=True)
+            h = h + a
+            c = L.attn_forward(lp["cross"], L.rms_norm(h, lp["ln2"], cfg.norm_eps),
+                               cfg, positions, causal=False, kv_override=enc_out)
+            h = h + c
+            f = L.mlp_forward(lp["mlp"], L.rms_norm(h, lp["ln3"], cfg.norm_eps))
+            return h + f, None
+
+        x, _ = jax.lax.scan(_remat(block, cfg), x, params["dec_layers"])
+        return x
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = params["embed"].astype(self.cdt)[batch["tokens"]]
+        positions = jnp.arange(x.shape[1])[None, :]
+        x = self._decoder_body(params, x, enc_out, positions)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones(batch["labels"].shape, jnp.float32)
+        loss, cnt = chunked_ce_loss(x, params["unembed"], batch["labels"], mask,
+                                    norm_w=params["final_norm"], eps=cfg.norm_eps)
+        return loss, {"loss": loss, "tokens": cnt}
+
+    def forward(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = params["embed"].astype(self.cdt)[batch["tokens"]]
+        positions = jnp.arange(x.shape[1])[None, :]
+        x = self._decoder_body(params, x, enc_out, positions)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return (x @ params["unembed"].astype(self.cdt)).astype(jnp.float32)
+
+    # ---------------- serve ----------------
+    def cache_spec(self, batch_size: int, max_len: int, enc_len: int) -> PyTree:
+        cfg = self.cfg
+        kv = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim), self.cdt)
+        ckv = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch_size, enc_len, cfg.n_kv_heads, cfg.head_dim), self.cdt)
+        return {"k": kv, "v": kv, "ck": ckv, "cv": ckv,
+                "len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def init_cache(self, batch_size: int, max_len: int, enc_len: int) -> PyTree:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_spec(batch_size, max_len, enc_len))
+
+    def prefill_cross(self, params, enc_out) -> Tuple[jax.Array, jax.Array]:
+        """Precompute per-layer cross K/V from encoder output."""
+        cfg = self.cfg
+        b, se, _ = enc_out.shape
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+
+        def per_layer(_, lp):
+            k = (enc_out @ lp["cross"]["wk"].astype(self.cdt)).reshape(b, se, hkv, dh)
+            v = (enc_out @ lp["cross"]["wv"].astype(self.cdt)).reshape(b, se, hkv, dh)
+            return None, (k, v)
+
+        _, (ck, cv) = jax.lax.scan(per_layer, None, params["dec_layers"])
+        return ck, cv
+
+    def prefill(self, params, batch, max_len=None) -> Tuple[jax.Array, PyTree]:
+        """Encoder pass + cross-KV precompute + decoder prompt prefill."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        ck, cv = self.prefill_cross(params, enc_out)
+        x = params["embed"].astype(self.cdt)[batch["tokens"]]
+        b, s, _ = x.shape
+        positions = jnp.arange(s)[None, :]
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+        def block(h, xs):
+            lp, ckl, cvl = xs
+            h = shard_activation(h, "residual")
+            hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            k = (hn @ lp["attn"]["wk"].astype(h.dtype)).reshape(b, s, hkv, dh)
+            v = (hn @ lp["attn"]["wv"].astype(h.dtype)).reshape(b, s, hkv, dh)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            q = (hn @ lp["attn"]["wq"].astype(h.dtype)).reshape(b, s, hq, dh)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            o = L.attention_chunked(q, k, v, causal=True, chunk=cfg.attn_chunk)
+            h = h + o.reshape(b, s, hq * dh) @ lp["attn"]["wo"].astype(h.dtype)
+            hn2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            q2 = (hn2 @ lp["cross"]["wq"].astype(h.dtype)).reshape(b, s, hq, dh)
+            co = L.attention_chunked(q2, ckl.astype(h.dtype), cvl.astype(h.dtype),
+                                     causal=False, chunk=cfg.attn_chunk)
+            h = h + co.reshape(b, s, hq * dh) @ lp["cross"]["wo"].astype(h.dtype)
+            f = L.mlp_forward(lp["mlp"], L.rms_norm(h, lp["ln3"], cfg.norm_eps))
+            return h + f, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(_remat(block, cfg), x,
+                                   (params["dec_layers"], ck, cv))
+        x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = (x @ params["unembed"].astype(self.cdt))[:, 0].astype(jnp.float32)
+        if max_len is not None and max_len > s:
+            pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+            ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+        return logits, {"k": ks, "v": vs, "ck": ck, "cv": cv, "len": jnp.int32(s)}
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdt)[tokens][:, None]
+        clen = cache["len"]
+        b = x.shape[0]
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+        def block(h, xs):
+            lp, kc, vc, ck, cv = xs
+            hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            a, nk, nv = L.attn_decode_forward(lp["attn"], hn, cfg, kc, vc, clen)
+            h = h + a
+            hn2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            q = (hn2 @ lp["cross"]["wq"].astype(h.dtype)).reshape(b, 1, hq, dh)
+            co = L.attention_decode(q, ck.astype(h.dtype), cv.astype(h.dtype),
+                                    jnp.int32(ck.shape[1]))
+            h = h + co.reshape(b, 1, hq * dh) @ lp["cross"]["wo"].astype(h.dtype)
+            f = L.mlp_forward(lp["mlp"], L.rms_norm(h, lp["ln3"], cfg.norm_eps))
+            return h + f, (nk, nv)
+
+        x, (nks, nvs) = jax.lax.scan(
+            block, x, (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"]))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x @ params["unembed"].astype(self.cdt))[:, 0].astype(jnp.float32)
+        new_cache = dict(cache, k=nks, v=nvs, len=clen + 1)
+        return logits, new_cache

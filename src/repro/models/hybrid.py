@@ -1,0 +1,225 @@
+"""Zamba2-style hybrid: Mamba2 backbone + *shared* attention blocks.
+
+``cfg.n_layers`` Mamba2 blocks; after every ``cfg.shared_every`` blocks one
+of ``cfg.n_shared`` alternating shared transformer blocks (full attention +
+SwiGLU MLP, weights reused across applications) is applied.  Each shared
+application keeps its own KV cache at decode time (inputs differ per depth).
+
+Simplification vs. the released Zamba2 checkpoints: we share weights exactly
+(no per-application LoRA deltas) — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_activation
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.transformer import _remat, chunked_ce_loss
+
+PyTree = Any
+
+
+def _segments(cfg: ModelConfig) -> List[int]:
+    full, rem = divmod(cfg.n_layers, cfg.shared_every)
+    segs = [cfg.shared_every] * full
+    if rem:
+        segs.append(rem)
+    return segs
+
+
+def _n_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_every
+
+
+def _tree_slice(tree, start: int, size: int):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + size, axis=0), tree)
+
+
+def _tree_index(tree, idx: int):
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+class Zamba2LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pdt = L.dtype_of(cfg.param_dtype)
+        self.cdt = L.dtype_of(cfg.dtype)
+
+    def init(self, rng) -> PyTree:
+        cfg = self.cfg
+        k_emb, k_m, k_s, k_un = jax.random.split(rng, 4)
+
+        def mamba_layer(k):
+            return {"m": ssm.init_mamba_block(k, cfg, self.pdt),
+                    "ln": jnp.zeros((cfg.d_model,), self.pdt)}
+
+        def shared_block(k):
+            ka, kf = jax.random.split(k)
+            return {"attn": L.init_attn(ka, cfg, self.pdt),
+                    "mlp": L.init_mlp(kf, cfg, self.pdt),
+                    "ln1": jnp.zeros((cfg.d_model,), self.pdt),
+                    "ln2": jnp.zeros((cfg.d_model,), self.pdt)}
+
+        return {
+            "embed": L.embed_init(k_emb, (cfg.vocab_padded, cfg.d_model), self.pdt),
+            "layers": jax.vmap(mamba_layer)(jax.random.split(k_m, cfg.n_layers)),
+            "shared": jax.vmap(shared_block)(jax.random.split(k_s, cfg.n_shared)),
+            "final_norm": jnp.zeros((cfg.d_model,), self.pdt),
+            "unembed": L.dense_init(k_un, (cfg.d_model, cfg.vocab_padded), self.pdt),
+        }
+
+    # ---------------- full-sequence body ----------------
+    def _shared_fwd(self, sp, h, positions):
+        cfg = self.cfg
+        a = L.attn_forward(sp["attn"], L.rms_norm(h, sp["ln1"], cfg.norm_eps),
+                           cfg, positions, causal=True)
+        h = h + a
+        f = L.mlp_forward(sp["mlp"], L.rms_norm(h, sp["ln2"], cfg.norm_eps))
+        return h + f
+
+    def _body(self, params, x, positions):
+        cfg = self.cfg
+
+        def mblock(h, lp):
+            h = shard_activation(h, "residual")
+            y = ssm.mamba_forward(lp["m"], L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg)
+            return h + y, None
+
+        mblock = _remat(mblock, cfg)
+        start = 0
+        for i, size in enumerate(_segments(cfg)):
+            seg = _tree_slice(params["layers"], start, size)
+            x, _ = jax.lax.scan(mblock, x, seg)
+            start += size
+            if size == cfg.shared_every:  # a full segment is followed by a shared block
+                sp = _tree_index(params["shared"], i % cfg.n_shared)
+                x = self._shared_fwd(sp, x, positions)
+        return x
+
+    def forward(self, params, batch) -> jax.Array:
+        x = params["embed"].astype(self.cdt)[batch["tokens"]]
+        positions = jnp.arange(x.shape[1])[None, :]
+        x = self._body(params, x, positions)
+        x = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        return (x @ params["unembed"].astype(self.cdt)).astype(jnp.float32)
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        x = params["embed"].astype(self.cdt)[batch["tokens"]]
+        positions = jnp.arange(x.shape[1])[None, :]
+        x = self._body(params, x, positions)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones(batch["labels"].shape, jnp.float32)
+        loss, cnt = chunked_ce_loss(x, params["unembed"], batch["labels"], mask,
+                                    norm_w=params["final_norm"], eps=self.cfg.norm_eps)
+        return loss, {"loss": loss, "tokens": cnt}
+
+    # ---------------- serve ----------------
+    def cache_spec(self, batch_size: int, max_len: int) -> PyTree:
+        cfg = self.cfg
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        napps = _n_apps(cfg)
+        kv = jax.ShapeDtypeStruct(
+            (napps, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim), self.cdt)
+        return {
+            "state": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_conv - 1, conv_dim), self.cdt),
+            "k": kv, "v": kv,
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def init_cache(self, batch_size: int, max_len: int) -> PyTree:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_spec(batch_size, max_len))
+
+    def prefill(self, params, batch, max_len=None) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdt)[batch["tokens"]]
+        b, s, _ = x.shape
+        positions = jnp.arange(s)[None, :]
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+        def mblock(h, lp):
+            y, st, conv = ssm.mamba_forward(lp["m"], L.rms_norm(h, lp["ln"], cfg.norm_eps),
+                                            cfg, return_cache=True)
+            return h + y, (st, conv)
+
+        mblock = _remat(mblock, cfg)
+        states, convs, ks, vs = [], [], [], []
+        start = 0
+        for i, size in enumerate(_segments(cfg)):
+            seg = _tree_slice(params["layers"], start, size)
+            x, (st, cv) = jax.lax.scan(mblock, x, seg)
+            states.append(st)
+            convs.append(cv)
+            start += size
+            if size == cfg.shared_every:
+                sp = _tree_index(params["shared"], i % cfg.n_shared)
+                hn = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+                q = (hn @ sp["attn"]["wq"].astype(self.cdt)).reshape(b, s, hq, dh)
+                k = (hn @ sp["attn"]["wk"].astype(self.cdt)).reshape(b, s, hkv, dh)
+                v = (hn @ sp["attn"]["wv"].astype(self.cdt)).reshape(b, s, hkv, dh)
+                q = L.apply_rope(q, positions, cfg.rope_theta)
+                k = L.apply_rope(k, positions, cfg.rope_theta)
+                o = L.attention_chunked(q, k, v, causal=True, chunk=cfg.attn_chunk)
+                x = x + o.reshape(b, s, hq * dh) @ sp["attn"]["wo"].astype(self.cdt)
+                x = x + L.mlp_forward(sp["mlp"], L.rms_norm(x, sp["ln2"], cfg.norm_eps))
+                ks.append(k)
+                vs.append(v)
+        kst, vst = jnp.stack(ks), jnp.stack(vs)
+        if max_len is not None and max_len > s:
+            pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+            kst, vst = jnp.pad(kst, pad), jnp.pad(vst, pad)
+        cache = {
+            "state": jnp.concatenate(states, 0), "conv": jnp.concatenate(convs, 0),
+            "k": kst, "v": vst, "len": jnp.int32(s),
+        }
+        x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = (x @ params["unembed"].astype(self.cdt))[:, 0].astype(jnp.float32)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdt)[tokens][:, None]
+        clen = cache["len"]
+
+        def mstep(h, xs):
+            lp, st, conv = xs
+            y, nst, nconv = ssm.mamba_step(lp["m"], L.rms_norm(h, lp["ln"], cfg.norm_eps),
+                                           cfg, st, conv)
+            return h + y, (nst, nconv)
+
+        nstates, nconvs, nks, nvs = [], [], [], []
+        start = 0
+        for i, size in enumerate(_segments(cfg)):
+            seg = _tree_slice(params["layers"], start, size)
+            st = jax.lax.slice_in_dim(cache["state"], start, start + size, axis=0)
+            cv = jax.lax.slice_in_dim(cache["conv"], start, start + size, axis=0)
+            x, (nst, ncv) = jax.lax.scan(mstep, x, (seg, st, cv))
+            nstates.append(nst)
+            nconvs.append(ncv)
+            start += size
+            if size == cfg.shared_every:
+                sp = _tree_index(params["shared"], i % cfg.n_shared)
+                hn = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+                a, nk, nv = L.attn_decode_forward(sp["attn"], hn, cfg,
+                                                  cache["k"][i], cache["v"][i], clen)
+                x = x + a
+                x = x + L.mlp_forward(sp["mlp"], L.rms_norm(x, sp["ln2"], cfg.norm_eps))
+                nks.append(nk)
+                nvs.append(nv)
+        new_cache = {
+            "state": jnp.concatenate(nstates, 0), "conv": jnp.concatenate(nconvs, 0),
+            "k": jnp.stack(nks), "v": jnp.stack(nvs), "len": clen + 1,
+        }
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x @ params["unembed"].astype(self.cdt))[:, 0].astype(jnp.float32)
+        return logits, new_cache

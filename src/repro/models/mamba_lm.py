@@ -1,0 +1,120 @@
+"""Attention-free Mamba2 LM (SSD) — mamba2-370m family.
+
+Decode state is O(1) in sequence length, which is what makes the
+``long_500k`` (524288-token context) cell feasible for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_activation
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.transformer import _remat, chunked_ce_loss
+
+PyTree = Any
+
+
+class Mamba2LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pdt = L.dtype_of(cfg.param_dtype)
+        self.cdt = L.dtype_of(cfg.dtype)
+
+    def init(self, rng) -> PyTree:
+        cfg = self.cfg
+        k_emb, k_layers = jax.random.split(rng)
+
+        def layer_init(k):
+            return {
+                "m": ssm.init_mamba_block(k, cfg, self.pdt),
+                "ln": jnp.zeros((cfg.d_model,), self.pdt),
+            }
+
+        params = {
+            "embed": L.embed_init(k_emb, (cfg.vocab_padded, cfg.d_model), self.pdt),
+            "layers": jax.vmap(layer_init)(jax.random.split(k_layers, cfg.n_layers)),
+            "final_norm": jnp.zeros((cfg.d_model,), self.pdt),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = L.dense_init(jax.random.fold_in(rng, 7),
+                                             (cfg.d_model, cfg.vocab_padded), self.pdt)
+        return params
+
+    def _unembed(self, params):
+        return params["embed"].T if self.cfg.tie_embeddings else params["unembed"]
+
+    def _body(self, params, x):
+        cfg = self.cfg
+
+        def block(h, lp):
+            h = shard_activation(h, "residual")
+            y = ssm.mamba_forward(lp["m"], L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg)
+            return h + y, None
+
+        x, _ = jax.lax.scan(_remat(block, cfg), x, params["layers"])
+        return x
+
+    def forward(self, params, batch) -> jax.Array:
+        x = params["embed"].astype(self.cdt)[batch["tokens"]]
+        x = self._body(params, x)
+        x = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        return (x @ self._unembed(params).astype(self.cdt)).astype(jnp.float32)
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        x = params["embed"].astype(self.cdt)[batch["tokens"]]
+        x = self._body(params, x)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones(batch["labels"].shape, jnp.float32)
+        loss, cnt = chunked_ce_loss(x, self._unembed(params), batch["labels"], mask,
+                                    norm_w=params["final_norm"], eps=self.cfg.norm_eps)
+        return loss, {"loss": loss, "tokens": cnt}
+
+    # ---------------- serve ----------------
+    def cache_spec(self, batch_size: int, max_len: int = 0) -> PyTree:
+        cfg = self.cfg
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "state": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_conv - 1, conv_dim), self.cdt),
+        }
+
+    def init_cache(self, batch_size: int, max_len: int = 0) -> PyTree:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), self.cache_spec(batch_size))
+
+    def prefill(self, params, batch) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdt)[batch["tokens"]]
+
+        def block(h, lp):
+            y, st, conv = ssm.mamba_forward(lp["m"], L.rms_norm(h, lp["ln"], cfg.norm_eps),
+                                            cfg, return_cache=True)
+            return h + y, (st, conv)
+
+        x, (states, convs) = jax.lax.scan(_remat(block, cfg), x, params["layers"])
+        x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = (x @ self._unembed(params).astype(self.cdt))[:, 0].astype(jnp.float32)
+        return logits, {"state": states, "conv": convs}
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdt)[tokens][:, None]
+
+        def block(h, xs):
+            lp, st, conv = xs
+            y, nst, nconv = ssm.mamba_step(lp["m"], L.rms_norm(h, lp["ln"], cfg.norm_eps),
+                                           cfg, st, conv)
+            return h + y, (nst, nconv)
+
+        x, (nstates, nconvs) = jax.lax.scan(block, x, (params["layers"], cache["state"], cache["conv"]))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x @ self._unembed(params).astype(self.cdt))[:, 0].astype(jnp.float32)
+        return logits, {"state": nstates, "conv": nconvs}

@@ -1,0 +1,102 @@
+"""Model factory + per-(arch, shape) input specs for lowering and smoke runs.
+
+``input_specs(cfg, shape)`` returns ``ShapeDtypeStruct`` stand-ins for every
+model input of the step that the shape's ``kind`` lowers:
+
+  * ``train``   -> ``train_step(state, batch)``
+  * ``prefill`` -> ``prefill_step(params, batch)``
+  * ``decode``  -> ``serve_step(params, cache, tokens)`` (one new token
+                   against a KV/state cache of ``seq_len``)
+
+Modality frontends are STUBS per the assignment: VLM patch embeddings and
+audio frame embeddings appear as precomputed inputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import Zamba2LM
+from repro.models.mamba_lm import Mamba2LM
+from repro.models.transformer import TransformerLM
+
+PyTree = Any
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    if cfg.family == "ssm":
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        return Zamba2LM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, b: int, s: int, *, with_labels: bool) -> Dict[str, Any]:
+    cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    if cfg.family == "vlm":
+        s_text = s - cfg.n_patches
+        out = {"tokens": _sds((b, s_text), jnp.int32),
+               "patch_embeds": _sds((b, cfg.n_patches, cfg.d_model), cdt)}
+        if with_labels:
+            out["labels"] = _sds((b, s_text), jnp.int32)
+        return out
+    if cfg.family == "encdec":
+        out = {"frames": _sds((b, s, cfg.d_model), cdt),
+               "tokens": _sds((b, s), jnp.int32)}
+        if with_labels:
+            out["labels"] = _sds((b, s), jnp.int32)
+        return out
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = _sds((b, s), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, b: int, s: int) -> Tuple[PyTree, Any]:
+    """(cache_specs, token_specs) for serve_step."""
+    model = get_model(cfg)
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache = model.cache_spec(b, s)
+    elif cfg.family == "encdec":
+        cache = model.cache_spec(b, s, s)
+    elif cfg.family == "ssm":
+        cache = model.cache_spec(b)
+    else:  # hybrid
+        cache = model.cache_spec(b, s)
+    return cache, _sds((b,), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, b, s, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, b, s, with_labels=False)}
+    cache, toks = decode_specs(cfg, b, s)
+    return {"cache": cache, "tokens": toks}
+
+
+def make_concrete_batch(cfg: ModelConfig, b: int, s: int, rng: jax.Array,
+                        *, with_labels: bool = True) -> Dict[str, Any]:
+    """Random concrete batch matching ``batch_specs`` (smoke tests/examples)."""
+    specs = batch_specs(cfg, b, s, with_labels=with_labels)
+    out = {}
+    for name, sd in specs.items():
+        rng, k = jax.random.split(rng)
+        if sd.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, sd.shape, 0, cfg.vocab, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, sd.shape, sd.dtype)
+    return out

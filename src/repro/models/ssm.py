@@ -1,0 +1,207 @@
+"""Mamba2 (state-space duality) blocks — chunked SSD forward + decode step.
+
+The chunked algorithm follows arXiv:2405.21060 §6: within-chunk outputs are
+computed with a masked attention-like quadratic form; chunk-boundary states
+are carried with a ``lax.scan``.  ``ssd_reference`` is the O(S) sequential
+oracle used by the tests; ``kernels/ssd`` is the Pallas TPU version of the
+within-chunk compute.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, gated_rms_norm
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_reference(x, dt, A, B, C, *, initial_state=None):
+    """Sequential scan oracle.
+
+    x:  [b, s, h, p]   (inputs, already multiplied by nothing)
+    dt: [b, s, h]      (positive step sizes)
+    A:  [h]            (negative decay rates)
+    B:  [b, s, n]      (input projection, single group)
+    C:  [b, s, n]      (output projection, single group)
+    Returns (y [b,s,h,p], final_state [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state0 = initial_state if initial_state is not None else jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # [b,h,p], [b,h], [b,n], [b,n]
+        dA = jnp.exp(dtt * A)  # [b,h]
+        dBx = jnp.einsum("bhp,bn,bh->bhpn", xt.astype(jnp.float32), Bt.astype(jnp.float32), dtt)
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct.astype(jnp.float32))
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0), jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, initial_state=None):
+    """Chunked SSD with identical semantics to :func:`ssd_reference`.
+
+    Work per chunk is O(L^2) attention-like + O(L·p·n) state math, giving the
+    sub-quadratic O(S·L) total that makes the ``long_500k`` cell feasible.
+    """
+    b, s_orig, h, p = x.shape
+    n = B.shape[-1]
+    if s_orig % chunk != 0:
+        # zero-pad the tail: dt=0 there => decay 1, dBx 0 => state unaffected.
+        pad = chunk - s_orig % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s = x.shape[1]
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    Bc = B.reshape(b, nc, chunk, n).astype(f32)
+    Cc = C.reshape(b, nc, chunk, n).astype(f32)
+
+    dA = dtc * A  # [b,nc,l,h]
+    cum = jnp.cumsum(dA, axis=2)  # inclusive cumsum along chunk
+    # decay from j (exclusive) to i (inclusive): exp(cum_i - cum_j)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,i,j,h]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    # intra-chunk: y[i] = sum_j<=i exp(cum_i-cum_j) dt_j (C_i·B_j) x_j
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # [b,nc,i,j]
+    w = cb[..., None] * L * dtc[:, :, None, :, :]  # [b,nc,i,j,h]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+    # chunk summary state: S_c = sum_j exp(cum_L - cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [b,nc,l,h]
+    states = jnp.einsum("bclh,bclh,bcln,bclhp->bchpn", decay_to_end, dtc, Bc, xc)
+    # carry across chunks: S_{c} (entering chunk c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [b,nc,h]
+    state0 = initial_state if initial_state is not None else jnp.zeros((b, h, p, n), f32)
+
+    def carry(stat, inp):
+        st_c, dec_c = inp  # [b,h,p,n], [b,h]
+        out = stat
+        new = stat * dec_c[..., None, None] + st_c
+        return new, out
+
+    final, prev_states = jax.lax.scan(
+        carry, state0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [b,nc,h,p,n] entering each chunk
+    # inter-chunk contribution: y[i] += exp(cum_i) C_i · S_enter
+    y_inter = jnp.einsum("bclh,bcln,bchpn->bclhp", jnp.exp(cum), Cc, prev_states)
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state, x, dt, A, B, C):
+    """Single decode step.  state: [b,h,p,n]; x: [b,h,p]; dt: [b,h]; B/C: [b,n]."""
+    dA = jnp.exp(dt * A)
+    dBx = jnp.einsum("bhp,bn,bh->bhpn", x.astype(jnp.float32), B.astype(jnp.float32), dt)
+    state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state, C.astype(jnp.float32))
+    return state, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (projections + conv + SSD + gated norm)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(key, cfg: ModelConfig, pdt) -> Dict[str, jax.Array]:
+    d, di, n, nh, w = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 6)
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+        ks[4], (nh,), jnp.float32, math.log(1e-3), math.log(1e-1)))))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + nh), pdt),
+        "conv_w": dense_init(ks[1], (w, conv_dim), pdt, scale=1.0 / math.sqrt(w)),
+        "conv_b": jnp.zeros((conv_dim,), pdt),
+        "out_proj": dense_init(ks[2], (di, d), pdt),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (nh,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_w": jnp.zeros((di,), pdt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: [B,S,C]; w: [W,C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W==4: unrolled, cheap
+        out = out + xp[:, i: i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def mamba_forward(p, x, cfg: ModelConfig, *, initial_state=None, conv_init=None,
+                  return_cache: bool = False):
+    """Full-sequence Mamba2 block.  x: [B,S,d] -> [B,S,d]."""
+    b, s, d = x.shape
+    di, n, nh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    cdt = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(cdt)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    if conv_init is not None:
+        xbc_in = jnp.concatenate([conv_init.astype(cdt), xbc], axis=1)
+        xbc_conv = _causal_conv(xbc_in, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))[:, conv_init.shape[1]:]
+    else:
+        xbc_conv = _causal_conv(xbc, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))
+    xbc_conv = jax.nn.silu(xbc_conv)
+    xs, B, C = jnp.split(xbc_conv, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])  # [H]
+    xh = xs.reshape(b, s, nh, ph)
+    y, final_state = ssd_chunked(xh, dt, A, B, C, chunk=min(cfg.ssm_chunk, s),
+                                 initial_state=initial_state)
+    y = y + xh.astype(jnp.float32).astype(cdt) * p["D"].astype(cdt)[:, None]
+    y = y.reshape(b, s, di)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(cdt)
+    if return_cache:
+        w1 = cfg.ssm_conv - 1
+        hist = xbc if conv_init is None else jnp.concatenate([conv_init.astype(cdt), xbc], axis=1)
+        if hist.shape[1] >= w1:
+            conv_cache = hist[:, hist.shape[1] - w1:, :]
+        else:
+            conv_cache = jnp.pad(hist, ((0, 0), (w1 - hist.shape[1], 0), (0, 0)))
+        return out, final_state, conv_cache
+    return out
+
+
+def mamba_step(p, x, cfg: ModelConfig, state, conv_cache):
+    """One-token Mamba2 step.
+
+    x: [B,1,d]; state: [B,H,P,N] fp32; conv_cache: [B,W-1,conv_dim].
+    Returns (out [B,1,d], new_state, new_conv_cache).
+    """
+    b = x.shape[0]
+    di, n, nh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    cdt = x.dtype
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(cdt)  # [B, ...]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    window = jnp.concatenate([conv_cache.astype(cdt), xbc[:, None]], axis=1)  # [B,W,cd]
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(cdt)) + p["conv_b"].astype(cdt)
+    conv_out = jax.nn.silu(conv_out)
+    xs, B, C = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    state, y = ssd_step(state, xs.reshape(b, nh, ph), dt, A, B, C)
+    y = y + xs.reshape(b, nh, ph) * p["D"].astype(cdt)[:, None]
+    y = y.reshape(b, di)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(cdt))[:, None]
+    return out, state, window[:, 1:]

@@ -1,0 +1,11 @@
+from repro.optim.adamw import (
+    OptConfig,
+    TrainState,
+    global_norm,
+    init_train_state,
+    lr_at,
+    make_train_step,
+)
+
+__all__ = ["OptConfig", "TrainState", "init_train_state", "make_train_step",
+           "lr_at", "global_norm"]

@@ -1,0 +1,10 @@
+from repro.serving.engine import ServeEngine
+from repro.serving.prefix_cache import (
+    ClusterConfig,
+    FNARouter,
+    PrefixCacheNode,
+    PrefixServeCluster,
+)
+
+__all__ = ["ServeEngine", "PrefixCacheNode", "FNARouter", "PrefixServeCluster",
+           "ClusterConfig"]

@@ -1,0 +1,61 @@
+"""Model serving engine: prefill + decode with KV caches and sampling."""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+
+PyTree = Any
+
+
+class ServeEngine:
+    """Batched greedy/temperature decoding around a model's prefill +
+    decode_step.  jit-compiled once per (batch, prompt_len, max_len)."""
+
+    def __init__(self, cfg: ModelConfig, params: Optional[PyTree] = None,
+                 rng: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            rng if rng is not None else jax.random.PRNGKey(0))
+        self._prefill = jax.jit(self.model.prefill, static_argnames=("max_len",)) \
+            if cfg.family in ("dense", "moe", "vlm", "hybrid", "encdec") \
+            else jax.jit(self.model.prefill)
+        self._step = jax.jit(self.model.decode_step)
+
+    def prefill(self, tokens: np.ndarray, max_len: int) -> Tuple[jax.Array, PyTree]:
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if self.cfg.family in ("dense", "moe", "vlm", "hybrid", "encdec"):
+            if self.cfg.family == "vlm":
+                batch["patch_embeds"] = jnp.zeros(
+                    (tokens.shape[0], self.cfg.n_patches, self.cfg.d_model),
+                    {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.cfg.dtype])
+            if self.cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (tokens.shape[0], tokens.shape[1], self.cfg.d_model),
+                    {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.cfg.dtype])
+            return self._prefill(self.params, batch, max_len=max_len)
+        return self._prefill(self.params, batch)
+
+    def decode(self, cache: PyTree, first_tokens: jax.Array, n_steps: int,
+               temperature: float = 0.0, rng: Optional[jax.Array] = None
+               ) -> Tuple[np.ndarray, PyTree]:
+        """Decode n_steps tokens.  first_tokens: [B] seeds the loop."""
+        toks = first_tokens
+        out = []
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        for i in range(n_steps):
+            logits, cache = self._step(self.params, cache, toks)
+            if temperature > 0:
+                rng, k = jax.random.split(rng)
+                toks = jax.random.categorical(k, logits / temperature, axis=-1)
+            else:
+                toks = jnp.argmax(logits, axis=-1)
+            toks = jnp.clip(toks, 0, self.cfg.vocab - 1).astype(jnp.int32)
+            out.append(np.asarray(toks))
+        return np.stack(out, axis=1), cache

@@ -1,0 +1,77 @@
+"""Checkpointing: atomic commit, GC, async, restore, resume contract."""
+import json
+import os
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.checkpoint.ckpt import all_steps
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros((16,))},
+        "m": {"w": jnp.ones((8, 16)), "b": jnp.zeros((16,))},
+        "step": jnp.int32(7),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    st = _state()
+    save(st, tmp_path, step=7)
+    abs_st = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), st)
+    got = restore(tmp_path, abs_st)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_no_partial_checkpoints(tmp_path):
+    st = _state()
+    save(st, tmp_path, step=1)
+    # a straggling .tmp dir must be invisible to discovery
+    (tmp_path / "step_9.tmp").mkdir()
+    assert all_steps(tmp_path) == [1]
+    assert latest_step(tmp_path) == 1
+
+
+def test_gc_keeps_newest(tmp_path):
+    st = _state()
+    for s in (1, 2, 3, 4, 5):
+        save(st, tmp_path, step=s, keep=2)
+    assert all_steps(tmp_path) == [4, 5]
+
+
+def test_async_save(tmp_path):
+    st = _state()
+    t = save(st, tmp_path, step=3, async_=True)
+    assert isinstance(t, threading.Thread)
+    t.join(timeout=30)
+    assert latest_step(tmp_path) == 3
+
+
+def test_manager_interval_and_force(tmp_path):
+    st = _state()
+    mgr = CheckpointManager(str(tmp_path), interval=10, keep=5, async_=False)
+    assert not mgr.maybe_save(st, 3)
+    assert mgr.maybe_save(st, 10)
+    assert mgr.maybe_save(st, 17, force=True)
+    mgr.wait()
+    assert set(all_steps(tmp_path)) == {10, 17}
+
+
+def test_restore_dtype_cast(tmp_path):
+    """Elastic restore may change precision policy (e.g. bf16 serving)."""
+    st = _state()
+    save(st, tmp_path, step=1)
+    abs_st = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16
+                                       if a.dtype == jnp.float32 else a.dtype), st)
+    got = restore(tmp_path, abs_st)
+    assert got["params"]["w"].dtype == jnp.bfloat16

@@ -1,0 +1,182 @@
+"""Unit + property tests for the paper's cost model and policies."""
+import itertools
+import math
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CacheView,
+    cs_fna,
+    cs_fno,
+    ds_pgm,
+    exclusion_probabilities,
+    exhaustive,
+    expected_cost,
+    hit_ratio_from_q,
+    hocs_fna,
+    is_sufficiently_accurate,
+    perfect_information,
+    phi_hat,
+    positive_indication_ratio,
+    rho_vector,
+    service_cost,
+)
+
+from hypothesis import assume
+
+probs = st.floats(0.001, 0.6)
+hits = st.floats(0.01, 0.99)
+# Theorem 4 / the inversion of Eq. (1) require a sufficiently-accurate
+# system (FP + FN < 1, Sec. II); the strategies can exceed it jointly.
+
+
+# ---------------------------------------------------------------------------
+# Eqs. (1)-(3)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(h=hits, fp=probs, fn=probs)
+def test_q_inversion_roundtrip(h, fp, fn):
+    assume(fp + fn < 0.95)
+    q = positive_indication_ratio(h, fp, fn)
+    assert 0.0 <= q <= 1.0
+    h2 = hit_ratio_from_q(q, fp, fn)
+    assert abs(h - h2) < 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(h=hits, fp=probs, fn=probs)
+def test_proposition_1_sufficiently_accurate_iff_nu_gt_pi(h, fp, fn):
+    """Prop. 1: FP + FN < 1  <=>  nu > pi (for h in (0,1))."""
+    pi, nu = exclusion_probabilities(h, fp, fn)
+    if is_sufficiently_accurate(fp, fn):
+        assert nu > pi - 1e-12
+    # (converse needs exact arithmetic at the boundary; covered by construction)
+
+
+@settings(max_examples=200, deadline=None)
+@given(h=hits, fp=probs, fn=probs)
+def test_bayes_consistency(h, fp, fn):
+    """Law of total probability: q*(1-pi) + (1-q)*(1-nu) == h."""
+    q = positive_indication_ratio(h, fp, fn)
+    pi, nu = exclusion_probabilities(h, fp, fn)
+    assert abs(q * (1 - pi) + (1 - q) * (1 - nu) - h) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 (HoCS_FNA) — optimality, Theorem 4
+# ---------------------------------------------------------------------------
+
+def brute_force_hocs(n_x, n, pi, nu, M):
+    best = None
+    for r1 in range(n_x + 1):
+        for r0 in range(n - n_x + 1):
+            v = phi_hat(r0, r1, nu, pi, M)
+            if best is None or v < best[0] - 1e-12:
+                best = (v, r0, r1)
+    return best
+
+
+@settings(max_examples=300, deadline=None)
+@given(h=hits, fp=probs, fn=probs,
+       n=st.integers(1, 12), n_x=st.integers(0, 12),
+       M=st.floats(1.5, 1000.0))
+def test_hocs_fna_matches_brute_force(h, fp, fn, n, n_x, M):
+    assume(fp + fn < 0.95)  # sufficiently-accurate (Thm. 4 precondition)
+    n_x = min(n_x, n)
+    pi, nu = exclusion_probabilities(h, fp, fn)
+    r0, r1 = hocs_fna(n_x, n, pi, nu, M)
+    assert 0 <= r1 <= n_x and 0 <= r0 <= n - n_x
+    v = phi_hat(r0, r1, nu, pi, M)
+    best_v, _, _ = brute_force_hocs(n_x, n, pi, nu, M)
+    assert v <= best_v + 1e-6, (v, best_v, r0, r1)
+
+
+def test_proposition_5_negative_access_conditions():
+    """Prop. 5(i): with n_x=0, a negative access helps iff nu < 1 - 1/M."""
+    M = 100.0
+    for nu in [0.5, 0.9, 0.985, 0.995]:
+        r0, r1 = hocs_fna(0, 5, pi=0.5, nu=nu, miss_penalty=M)
+        helps = nu < 1 - 1 / M
+        assert (r0 >= 1) == helps, (nu, r0)
+
+
+def test_proposition_6_no_access_when_fp_dominates():
+    """If (1-h)FP >= h(1-FN)(M-1), best policy accesses nothing."""
+    h, fp, fn, M = 0.01, 0.5, 0.1, 1.5
+    assert (1 - h) * fp >= h * (1 - fn) * (M - 1)
+    pi, nu = exclusion_probabilities(h, fp, fn)
+    r0, r1 = hocs_fna(3, 5, pi, nu, M)
+    assert r0 == 0 and r1 == 0
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous: DS_PGM vs exhaustive, Theorem 7 reduction
+# ---------------------------------------------------------------------------
+
+def _random_instance(rng, n):
+    costs = [rng.uniform(1, 4) for _ in range(n)]
+    rhos = [rng.uniform(0.0, 1.0) for _ in range(n)]
+    M = rng.choice([10.0, 50.0, 100.0, 500.0])
+    return costs, rhos, M
+
+
+def test_ds_pgm_near_optimal_random():
+    rng = random.Random(7)
+    worst = 1.0
+    for _ in range(400):
+        n = rng.randint(1, 8)
+        costs, rhos, M = _random_instance(rng, n)
+        sel_a = ds_pgm(costs, rhos, M)
+        sel_o = exhaustive(costs, rhos, M)
+        ca = service_cost(costs, rhos, M, sel_a)
+        co = service_cost(costs, rhos, M, sel_o)
+        ratio = ca / max(co, 1e-12)
+        worst = max(worst, ratio)
+        # [14]: log(M)-approximation; empirically near 1
+        assert ratio <= 1.0 + math.log(M), (costs, rhos, M)
+    assert worst < 1.5  # paper: "close-to-optimal in practice"
+
+
+def test_homogeneous_ds_pgm_equals_hocs():
+    """On homogeneous inputs the heterogeneous machinery reduces to Alg. 1."""
+    h, fp, fn, M, n = 0.6, 0.02, 0.3, 100.0, 6
+    pi, nu = exclusion_probabilities(h, fp, fn)
+    for n_x in range(n + 1):
+        indications = [1] * n_x + [0] * (n - n_x)
+        q = positive_indication_ratio(h, fp, fn)
+        views = [CacheView(cost=1.0, fp=fp, fn=fn, q=q) for _ in range(n)]
+        sel = cs_fna(views, indications, M, alg=exhaustive)
+        r1 = sum(1 for j in sel if indications[j])
+        r0 = sum(1 for j in sel if not indications[j])
+        r0_star, r1_star = hocs_fna(n_x, n, pi, nu, M)
+        assert phi_hat(r0, r1, nu, pi, M) == pytest.approx(
+            phi_hat(r0_star, r1_star, nu, pi, M), abs=1e-6)
+
+
+def test_cs_fna_dominates_cs_fno_in_expectation():
+    """Theorem 7 consequence: with exact estimates and the SAME optimal
+    subroutine, FNA expected cost <= FNO expected cost (FNO's feasible set
+    is a subset of FNA's)."""
+    rng = random.Random(3)
+    for _ in range(200):
+        n = rng.randint(1, 6)
+        views = [CacheView(cost=rng.uniform(1, 3), fp=rng.uniform(0.001, 0.3),
+                           fn=rng.uniform(0.0, 0.5), q=rng.uniform(0.05, 0.95))
+                 for _ in range(n)]
+        indications = [rng.random() < 0.4 for _ in range(n)]
+        M = 100.0
+        sel_a = cs_fna(views, indications, M, alg=exhaustive)
+        sel_o = cs_fno(views, indications, M, alg=exhaustive)
+        ca = expected_cost(views, indications, sel_a, M)
+        co = expected_cost(views, indications, sel_o, M)
+        assert ca <= co + 1e-9
+
+
+def test_perfect_information():
+    assert perfect_information([3, 1, 2], [True, False, True]) == [2]
+    assert perfect_information([3, 1, 2], [False, False, False]) == []
+    assert perfect_information([3, 1, 2], [True, True, True]) == [1]

@@ -1,0 +1,92 @@
+"""Data pipeline determinism/resume + optimizer behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, Prefetcher, SyntheticLMData
+from repro.optim import OptConfig, global_norm, init_train_state, lr_at, make_train_step
+from repro.optim.adamw import clip_by_global_norm
+
+
+def test_batch_is_pure_function_of_step():
+    d1 = SyntheticLMData(DataConfig(seed=5))
+    d2 = SyntheticLMData(DataConfig(seed=5))
+    for s in (0, 3, 1000):
+        b1, b2 = d1.batch_at(s), d2.batch_at(s)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch_at(0)["tokens"], d1.batch_at(1)["tokens"])
+
+
+def test_labels_are_next_tokens():
+    d = SyntheticLMData(DataConfig())
+    b = d.batch_at(0)
+    # the affine structure: most labels equal (a*tok + b) % V
+    pred = (31 * b["tokens"] + 7) % 256
+    agree = (pred == b["labels"]).mean()
+    assert agree > 0.8  # 10% corruption
+
+
+def test_prefetcher_matches_sync_iteration():
+    d = SyntheticLMData(DataConfig(seed=2))
+    pf = Prefetcher(d.iterate(start_step=4), depth=2)
+    try:
+        for s in range(4, 8):
+            got = pf.get()
+            np.testing.assert_array_equal(got["tokens"], d.batch_at(s)["tokens"])
+    finally:
+        pf.close()
+
+
+def test_lr_schedule():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(lr_at(cfg, 0)) == 0.0
+    assert float(lr_at(cfg, 10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr_at(cfg, 100)) == pytest.approx(1e-4, rel=1e-2)
+    assert float(lr_at(cfg, 55)) < 1e-3
+
+
+def test_global_norm_clip():
+    tree = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, g = clip_by_global_norm(tree, 1.0)
+    assert float(g) == pytest.approx(10.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_train_step_decreases_loss_quadratic():
+    """Sanity: AdamW minimises a simple supervised proxy via model protocol."""
+
+    class Toy:
+        def loss(self, params, batch):
+            pred = batch["x"] @ params["w"]
+            l = jnp.mean((pred - batch["y"]) ** 2)
+            return l, {"loss": l}
+
+    cfg = OptConfig(lr=0.05, warmup_steps=1, total_steps=200, weight_decay=0.0)
+    step = jax.jit(make_train_step(Toy(), cfg))
+    k = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(k, (8, 1))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+    batch = {"x": x, "y": x @ w_true}
+    state = init_train_state({"w": jnp.zeros((8, 1))}, cfg)
+    first = None
+    for _ in range(60):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < 0.05 * first
+
+
+def test_int8_ef_compression_trains():
+    class Toy:
+        def loss(self, params, batch):
+            l = jnp.mean((params["w"] - 3.0) ** 2)
+            return l, {"loss": l}
+
+    cfg = OptConfig(lr=0.1, warmup_steps=1, total_steps=100, weight_decay=0.0,
+                    compression="int8_ef")
+    step = jax.jit(make_train_step(Toy(), cfg))
+    state = init_train_state({"w": jnp.zeros((2048,))}, cfg)
+    assert "ef" in state
+    for _ in range(50):
+        state, m = step(state, {})
+    assert float(m["loss"]) < 0.05

@@ -1,0 +1,81 @@
+"""Dry-run machinery tests.
+
+The 512-device lowering itself runs in a subprocess (device count locks at
+first jax init).  One small cell compiles end to end and the JSON contract
+is checked; mesh/spec helpers are unit-tested in-process.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, cells, get_config, shape_applicable
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_cell_enumeration_rules():
+    cs = list(cells())
+    assert len(cs) == 32  # 10 archs x 3 shapes + 2 ssm/hybrid long_500k
+    assert ("mamba2-370m", "long_500k") in cs
+    assert ("zamba2-7b", "long_500k") in cs
+    assert ("deepseek-coder-33b", "long_500k") not in cs
+    for arch in ARCHS:
+        assert (arch, "train_4k") in cs and (arch, "decode_32k") in cs
+
+
+def test_input_specs_cover_all_cells():
+    import jax
+    from repro.configs import get_shape
+    from repro.models import input_specs
+    for arch, shape_name in cells():
+        sp = input_specs(get_config(arch), get_shape(shape_name))
+        leaves = jax.tree.leaves(sp)
+        assert leaves and all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+def test_param_pspec_divisibility():
+    """Every generated spec must divide its dim by the mesh axis size."""
+    import jax
+    from repro.distributed.sharding import param_pspecs
+    from repro.models import get_model
+    axis_sizes = {"model": 16, "data": 16, "pod": 2}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        model = get_model(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        specs = param_pspecs(params, cfg.tie_embeddings, axis_sizes)
+        for (path, leaf), (_, spec) in zip(
+                jax.tree_util.tree_flatten_with_path(params)[0],
+                jax.tree_util.tree_flatten_with_path(
+                    specs, is_leaf=lambda s: hasattr(s, "index"))[0]):
+            for dim, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = 1
+                for a in axes:
+                    size *= axis_sizes[a]
+                assert leaf.shape[dim] % size == 0, (arch, path, spec, leaf.shape)
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_subprocess(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-135m",
+         "--shape", "decode_32k", "--mesh", "single", "--out", str(tmp_path)],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    rec = json.loads((tmp_path / "smollm-135m__decode_32k__single.json").read_text())
+    assert rec["chips"] == 256
+    rl = rec["roofline"]
+    assert rl["flops_per_device"] > 0
+    assert rl["hbm_bytes_per_device"] > 0
+    assert rl["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["memory_analysis"]["temp_size_in_bytes"] > 0

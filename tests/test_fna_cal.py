@@ -1,0 +1,33 @@
+"""Beyond-paper policy: fna_cal (empirical exclusion-probability feedback).
+
+The deployable configuration must DOMINATE: never worse than FNO (it can
+always learn nu ~ 1 and stop probing) and at least as good as paper-FNA in
+the staleness regime.
+"""
+import numpy as np
+import pytest
+
+from repro.cachesim import SimConfig, get_trace
+from repro.cachesim.simulator import run_policies
+
+N = 40_000
+
+
+@pytest.mark.parametrize("trace_name,interval", [
+    ("wiki", 512), ("wiki", 2048), ("gradle", 128), ("gradle", 1024),
+])
+def test_fna_cal_dominates(trace_name, interval):
+    trace = get_trace(trace_name, N, seed=3)
+    base = SimConfig(cache_size=2000, update_interval=interval)
+    res = run_policies(trace, base, policies=("fna", "fna_cal", "fno", "pi"))
+    cal, fno, fna, pi = (res[k].mean_cost for k in ("fna_cal", "fno", "fna", "pi"))
+    assert pi <= cal + 1e-9
+    assert cal <= fno * 1.03, (cal, fno)       # never worse than FNO
+    assert cal <= fna * 1.03, (cal, fna)       # never worse than paper-FNA
+
+
+def test_fna_cal_big_win_on_recency_bias():
+    trace = get_trace("gradle", N, seed=3)
+    base = SimConfig(cache_size=2000, update_interval=512)
+    res = run_policies(trace, base, policies=("fna_cal", "fno"))
+    assert res["fna_cal"].mean_cost < 0.75 * res["fno"].mean_cost
