@@ -20,7 +20,10 @@ def _time(f, *args, iters=3):
     return (time.time() - t0) / iters
 
 
-def run_kernel_benches(full: bool):
+def run_kernel_benches(full: bool, interpret: bool = None):
+    """``interpret=None`` auto-selects Pallas interpret mode from the JAX
+    backend (compiled on TPU, interpret elsewhere); pass True/False to
+    force it (``benchmarks.run --interpret``)."""
     from repro.kernels.bloom import bloom_probe, build_indicator
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.ssd import ssd_scan
@@ -34,7 +37,8 @@ def run_kernel_benches(full: bool):
     bits = jnp.stack([build_indicator(member, mbytes * 8, k, seed=j)
                       for j in range(n)])
     keys = jnp.arange(bkeys, dtype=jnp.int32)
-    dt = _time(lambda b_, k_: bloom_probe(b_, k_, k=k), bits, keys)
+    dt = _time(lambda b_, k_: bloom_probe(b_, k_, k=k, interpret=interpret),
+               bits, keys)
     probes = bkeys * n * k
     out.append(("kernel_bloom_probe", dt / bkeys * 1e6, probes))
 

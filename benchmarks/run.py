@@ -6,7 +6,8 @@ Prints ``name,us_per_call,derived`` CSV (one line per benchmark):
   * router/kernel micro-benches: us_per_call = wall-clock per call on this
     host; derived = the relevant throughput/quality scalar.
 
-``python -m benchmarks.run [--full] [--only section[,section...]]``
+``python -m benchmarks.run [--full] [--only section[,section...]]
+[--interpret auto|on|off]``
 """
 from __future__ import annotations
 
@@ -53,14 +54,21 @@ def router_bench(full: bool):
     return [("router_cs_fna_batched", dt / b * 1e6, float(mask.mean()))]
 
 
-def kernel_benches(full: bool):
+def kernel_benches(full: bool, interpret=None):
     out = []
     try:
         from benchmarks.kernels import run_kernel_benches
-        out.extend(run_kernel_benches(full))
+        out.extend(run_kernel_benches(full, interpret=interpret))
     except ImportError:
         pass
     return out
+
+
+def sim_benches(full: bool):
+    """Trace-simulator throughput (fast engine per policy x trace, plus the
+    fast-vs-reference speedup on the 200k gradle headline)."""
+    from benchmarks.sim import run_sim_benches
+    return run_sim_benches(full)
 
 
 def serving_bench(full: bool):
@@ -77,13 +85,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale parameters")
     ap.add_argument("--only", default="")
+    ap.add_argument("--interpret", choices=("auto", "on", "off"), default="auto",
+                    help="Pallas interpret mode for kernel benches "
+                         "(auto = from JAX backend: compiled on TPU)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    interpret = {"auto": None, "on": True, "off": False}[args.interpret]
 
     sections = {
         "paper": paper_fig_benches,
         "router": router_bench,
-        "kernels": kernel_benches,
+        "kernels": lambda full: kernel_benches(full, interpret=interpret),
+        "sim": sim_benches,
         "serving": serving_bench,
     }
     print("name,us_per_call,derived")

@@ -1,0 +1,54 @@
+"""Simulator throughput benchmarks: requests/sec per policy x trace on the
+fast engine, plus the headline fast-vs-reference comparison
+(``sim_throughput_*`` / ``sim_speedup_fna_gradle``).
+
+CSV columns: us_per_call = wall-clock per simulated request; derived =
+requests/sec (or the speedup factor for the ``sim_speedup`` row).
+"""
+from __future__ import annotations
+
+import time
+
+HEADLINE_REQUESTS = 200_000      # the acceptance benchmark (gradle, fna)
+POLICIES = ("fna", "fno", "pi", "hocs")
+
+
+def _run_once(cfg, trace):
+    from repro.cachesim import Simulator
+    t0 = time.time()
+    Simulator(cfg).run(trace)
+    return time.time() - t0
+
+
+def run_sim_benches(full: bool):
+    from repro.cachesim import SimConfig, get_trace
+    from repro.cachesim.traces import TRACES
+
+    out = []
+    # --- headline: fast vs reference, 200k-request gradle trace, fna ----
+    trace = get_trace("gradle", HEADLINE_REQUESTS, seed=0)
+    fast_cfg = SimConfig(engine="fast")
+    _run_once(fast_cfg, trace)       # warm numpy/XLA caches
+    dt_fast = min(_run_once(fast_cfg, trace) for _ in range(2))
+    n_ref = HEADLINE_REQUESTS if full else HEADLINE_REQUESTS // 5
+    dt_ref = _run_once(SimConfig(engine="reference"), trace[:n_ref])
+    rps_fast = HEADLINE_REQUESTS / dt_fast
+    rps_ref = n_ref / dt_ref
+    out.append(("sim_throughput_fast_fna_gradle",
+                dt_fast / HEADLINE_REQUESTS * 1e6, rps_fast))
+    out.append(("sim_throughput_ref_fna_gradle",
+                dt_ref / n_ref * 1e6, rps_ref))
+    out.append(("sim_speedup_fna_gradle",
+                dt_fast / HEADLINE_REQUESTS * 1e6, rps_fast / rps_ref))
+
+    # --- requests/sec per policy x trace (fast engine) ------------------
+    n_req = 100_000 if full else 30_000
+    for trace_name in TRACES:
+        tr = get_trace(trace_name, n_req, seed=0)
+        for policy in POLICIES:
+            costs = (2.0, 2.0, 2.0) if policy == "hocs" else (1.0, 2.0, 3.0)
+            cfg = SimConfig(policy=policy, costs=costs, engine="fast")
+            dt = _run_once(cfg, tr)
+            out.append((f"sim_{policy}_{trace_name}", dt / n_req * 1e6,
+                        n_req / dt))
+    return out

@@ -1,5 +1,16 @@
+"""Trace-driven multi-cache simulation (paper Sec. V).
+
+Two bit-exact engines share the system model (``SimConfig.engine``):
+the per-request reference loop, and the epoch-batched fast engine
+(``repro.cachesim.fastpath``) built on two invariants — stale bitmaps
+only change at advertisement boundaries, and (pi, nu) views only change
+at ``(node.version, q_est.version)`` bumps, bounding distinct decisions
+by 2^n per view version.  See the ``repro.cachesim.simulator`` module
+docstring for the full invariant statement.
+"""
 from repro.cachesim.lru import LRUCache
-from repro.cachesim.simulator import SimConfig, SimResult, Simulator
+from repro.cachesim.simulator import SimConfig, SimResult, Simulator, run_policies
 from repro.cachesim.traces import get_trace, TRACES
 
-__all__ = ["LRUCache", "SimConfig", "SimResult", "Simulator", "get_trace", "TRACES"]
+__all__ = ["LRUCache", "SimConfig", "SimResult", "Simulator", "run_policies",
+           "get_trace", "TRACES"]

@@ -15,6 +15,39 @@ System model:
 
 Every request pays sum(c_j for j accessed) + M if no accessed cache holds
 the item (the realised service cost; its mean is the paper's metric).
+
+Engines
+-------
+``SimConfig.engine`` selects between two bit-exact implementations:
+
+  * ``"reference"`` — the per-request scalar loop (the oracle).
+  * ``"fast"``      — the epoch-batched loop in ``repro.cachesim.fastpath``.
+
+The fast engine exploits two exact invariants of the system model:
+
+  I1 (advertisement epochs): the client-visible STALE bitmaps only change
+     when a cache advertises, which happens after ``update_interval``
+     insertions into that cache.  Between two advertisement boundaries the
+     indication I_j(x) of every request is a pure function of the frozen
+     bitmap, so indications for a whole epoch slice are computed in one
+     vectorised reduction over the precomputed hash indices.
+
+  I2 (view versions): the client-side views (pi_j, nu_j) only move when
+     ``(node.version, q_est.version)`` bumps — i.e. at FP/FN re-estimation
+     (every ``est_interval`` insertions), at advertisements, and at
+     q-epoch boundaries (every ``q_horizon`` requests).  Between bumps the
+     policy's decision depends on the request ONLY through the n-bit
+     indication pattern, so there are at most 2^n distinct selections per
+     view version; the fast engine memoises the full decision table per
+     version (via the batched JAX ``ds_pgm_batched`` path) and turns
+     per-request policy calls into table lookups.
+
+Everything else (LRU dynamics, CBF bookkeeping cadence, Eq. 7-9 updates,
+cost accounting order) is replicated operation-for-operation, so the two
+engines produce identical ``SimResult``s for all model-based policies.
+``fna_cal`` mutates its empirical EWMAs per probe outcome — its views can
+change on EVERY request, which breaks I2 — so it always runs on the
+reference engine.
 """
 from __future__ import annotations
 
@@ -54,6 +87,8 @@ class SimConfig:
     # costs; uses pooled pi/nu estimates and accesses the r1* cheapest
     # positive + r0* cheapest negative caches.
     alg: str = "ds_pgm"               # ds_pgm | exhaustive (subroutine)
+    engine: str = "fast"              # fast | reference (bit-exact twins;
+    # fna_cal always runs on the reference engine — see module docstring)
     seed: int = 0
     # --- fna_cal (beyond-paper): empirical exclusion-probability feedback ---
     # Eq. (7) counts BITS, inflating FN by ~k when staleness concentrates in
@@ -138,12 +173,13 @@ class _CacheNode:
     def stale_query(self, key: int) -> bool:
         return bool(np.all(self.ind.stale[self._idx(key)]))
 
-    def insert(self, key: int) -> None:
+    def insert(self, key: int) -> bool:
         """Controller placement: LRU put + CBF bookkeeping + periodic
-        advertisement / estimation driven by insertions."""
+        advertisement / estimation driven by insertions.  Returns True when
+        the FP/FN estimates changed (``version`` bumped)."""
         inserted, evicted = self.lru.put(key)
         if not inserted:
-            return
+            return False
         c = self.ind.cbf
         idx = self._idx(key)
         c.counters[idx] = np.minimum(c.counters[idx].astype(np.int32) + 1, 255)
@@ -152,10 +188,12 @@ class _CacheNode:
             c.counters[eidx] = np.maximum(c.counters[eidx].astype(np.int32) - 1, 0)
         self._since_adv += 1
         self._since_est += 1
+        bumped = False
         if self._since_est >= self.est_interval:
             self.ind.estimate_rates()
             self._since_est = 0
             self.version += 1
+            bumped = True
         if self._since_adv >= self.update_interval:
             self.ind.advertise()
             # a fresh advertisement resets the staleness estimates
@@ -163,6 +201,8 @@ class _CacheNode:
             self._since_adv = 0
             self._since_est = 0
             self.version += 1
+            bumped = True
+        return bumped
 
 
 class Simulator:
@@ -179,7 +219,13 @@ class Simulator:
         self.alg = {"ds_pgm": ds_pgm, "exhaustive": exhaustive}[cfg.alg]
 
     def _designated(self, key: int) -> int:
+        """The single cache the controller places (and measures) ``key`` in."""
         return int(key) % self.cfg.n_caches
+
+    def _designated_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorised :meth:`_designated` for the fast engine."""
+        return (np.asarray(keys, dtype=np.uint64)
+                % np.uint64(self.cfg.n_caches)).astype(np.int64)
 
     def _refresh_views(self):
         """Recompute per-cache (pi, nu) only when fp/fn/q estimates moved."""
@@ -195,13 +241,24 @@ class Simulator:
     def run(self, trace: np.ndarray, result: Optional[SimResult] = None) -> SimResult:
         cfg = self.cfg
         res = result or SimResult(policy=cfg.policy)
+        trace = np.asarray(trace, dtype=np.uint64)
+        self._pi = [1.0] * cfg.n_caches
+        self._nu = [1.0] * cfg.n_caches
+        self._view_ver = [None] * cfg.n_caches
+        if cfg.engine == "fast" and cfg.policy != "fna_cal":
+            from repro.cachesim.fastpath import run_fast
+            return run_fast(self, trace, res)
+        if cfg.engine not in ("fast", "reference"):
+            raise ValueError(f"unknown engine {cfg.engine!r}")
+        return self._run_reference(trace, res)
+
+    def _run_reference(self, trace: np.ndarray, res: SimResult) -> SimResult:
+        """The seed per-request scalar loop — the bit-exact oracle."""
+        cfg = self.cfg
         costs = list(cfg.costs)
         n = cfg.n_caches
         M = cfg.miss_penalty
         nodes = self.nodes
-        self._pi = [1.0] * n
-        self._nu = [1.0] * n
-        self._view_ver = [None] * n
         # fna_cal empirical estimators (miss prob given indication, per cache).
         # Optimistic init: when FP+FN >= ~1 the indicator is uninformative and
         # h is UNIDENTIFIABLE from (q, FP, FN) — Eq. (1) inversion clamps to
@@ -218,7 +275,6 @@ class Simulator:
         eps_draws = rng_cal.random(trace.shape[0]) if cal else None
         eps_pick = rng_cal.integers(0, n, trace.shape[0]) if cal else None
         # vectorised stale-query indices for the whole trace, per cache
-        trace = np.asarray(trace, dtype=np.uint64)
         idx_all = [hash_indices(trace, nd.ind.cbf.k, nd.ind.cbf.m, nd.ind.cbf.seed)
                    for nd in nodes]
         is_pi = cfg.policy == "pi"
@@ -231,7 +287,7 @@ class Simulator:
             for qe, ind in zip(self.q_est, indications):
                 qe.observe(ind)
             # --- indicator-quality measurement on the designated cache ---
-            dj = x % n
+            dj = self._designated(x)
             in_dj = x in nodes[dj].lru
             if in_dj:
                 res.fn_opportunities += 1

@@ -13,6 +13,8 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
 
 EPS = 1e-12
 
@@ -65,10 +67,41 @@ def ds_pgm_batched(costs, rhos, miss_penalty, *, fno_mask=None) -> jax.Array:
     best = jnp.argmin(phi, axis=1)                          # prefix length
     pick_sorted = jnp.arange(n)[None, :] < best[:, None]    # [B,N] in sorted order
     # scatter back to cache order
-    mask = jnp.zeros((b, n), bool)
     mask = jnp.take_along_axis(
         pick_sorted, jnp.argsort(order, axis=1), axis=1)
     return mask
+
+
+def selection_tables(costs, pi, nu, miss_penalty, *, fno: bool = False) -> np.ndarray:
+    """[V, 2^n, n] DS_PGM decision tables over ALL indication patterns for
+    a whole batch of V view versions at once.
+
+    ``pi``/``nu`` are [V, n] (or [n], treated as V=1) exclusion
+    probabilities; row (v, p) holds the selection mask of view version v
+    for the indication pattern whose bit j is ``(p >> j) & 1``.
+    ``fno=True`` restricts candidates to positive-indication caches
+    (CS_FNO).  Evaluated in float64 (x64) to match the scalar
+    :func:`repro.core.ds_pgm` path — the simulator fast engine batches
+    its entire version history into one call here.  Parity with the
+    scalar path is exact unless two prefix costs coincide to within the
+    scalar EPS dead-band (~1e-12): this path evaluates the Eq. (10)
+    product as exp(cumsum(log .)) and takes a plain argmin; see the
+    parity caveat in ``repro.cachesim.fastpath``.
+    """
+    pi = np.atleast_2d(np.asarray(pi, np.float64))
+    nu = np.atleast_2d(np.asarray(nu, np.float64))
+    v, n = pi.shape
+    k = 1 << n
+    pat_bits = (np.arange(k)[:, None] >> np.arange(n)[None, :]) & 1   # [K,n]
+    rhos = np.where(pat_bits[None, :, :] > 0,
+                    pi[:, None, :], nu[:, None, :]).reshape(v * k, n)
+    with enable_x64():
+        mask = ds_pgm_batched(
+            jnp.asarray(np.asarray(costs, np.float64)),
+            jnp.asarray(rhos), float(miss_penalty),
+            fno_mask=jnp.asarray(np.tile(pat_bits, (v, 1))) if fno else None)
+        out = np.asarray(mask)
+    return out.reshape(v, k, n)
 
 
 def cs_fna_batched(indications, costs, q, fp, fn, miss_penalty) -> jax.Array:

@@ -45,12 +45,13 @@ def _argmin_geometric(m_eff: float, rho: float, r_max: int) -> int:
     l = math.log(1.0 / rho)
     r_cont = math.log(max(m_eff * l, EPS)) / l
     best_r, best_v = 0, m_eff
-    for r in {0, 1, int(math.floor(r_cont)), int(math.ceil(r_cont)), r_max}:
+    # ascending candidate order + strict-improvement test: on a tie (within
+    # EPS) the smaller r is kept, as documented
+    for r in sorted({0, 1, int(math.floor(r_cont)), int(math.ceil(r_cont)), r_max}):
         if 0 <= r <= r_max:
             v = r + m_eff * rho ** r
-            if v < best_v - EPS or (abs(v - best_v) < EPS and r < best_r):
-                if v < best_v:
-                    best_r, best_v = r, v
+            if v < best_v - EPS:
+                best_r, best_v = r, v
     return best_r
 
 

@@ -45,7 +45,9 @@ def _probe_kernel(seeds_ref, keys_ref, bits_ref, out_ref, *, k: int, m: int):
 
         def body(wb, val):
             start = wb * BYTE_BLOCK
-            block = pl.load(bits_ref, (0, pl.dslice(start, BYTE_BLOCK)))
+            # row index as a size-1 dslice: a bare scalar trips the
+            # interpret-mode discharge rule on current JAX
+            block = pl.load(bits_ref, (pl.dslice(0, 1), pl.dslice(start, BYTE_BLOCK)))[0]
             block = block.astype(jnp.int32)          # [BB]
             lanes = start + jax.lax.broadcasted_iota(jnp.int32, (1, BYTE_BLOCK), 1)
             sel = jnp.where(byte_idx[:, None] == lanes, block[None, :], 0)
@@ -58,11 +60,17 @@ def _probe_kernel(seeds_ref, keys_ref, bits_ref, out_ref, *, k: int, m: int):
     out_ref[...] = acc.astype(jnp.int8)[:, None]
 
 
+def default_interpret() -> bool:
+    """Compiled only on TPU; interpret mode everywhere else — including
+    GPU, deliberately: the kernel's blocked iota-compare/select-reduce
+    design targets TPU VMEM (see module docstring) and is not expected to
+    lower well elsewhere.  Pass ``interpret=False`` to override."""
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("k", "key_block", "interpret"))
-def bloom_probe_pallas(bits, keys, seeds, *, k: int, key_block: int = DEFAULT_KEY_BLOCK,
-                       interpret: bool = True):
-    """bits: [n, m_bytes] uint8 (m_bytes % 2048 == 0); keys: [B] int32/uint32;
-    seeds: [n] int32.  Returns [B, n] int8 indications."""
+def _bloom_probe_jit(bits, keys, seeds, *, k: int, key_block: int,
+                     interpret: bool):
     n, mbytes = bits.shape
     b = keys.shape[0]
     assert b % key_block == 0, (b, key_block)
@@ -82,3 +90,18 @@ def bloom_probe_pallas(bits, keys, seeds, *, k: int, key_block: int = DEFAULT_KE
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int8),
         interpret=interpret,
     )(seeds, keys, bits)
+
+
+def bloom_probe_pallas(bits, keys, seeds, *, k: int,
+                       key_block: int = DEFAULT_KEY_BLOCK,
+                       interpret: bool = None):
+    """bits: [n, m_bytes] uint8 (m_bytes % 2048 == 0); keys: [B] int32/uint32;
+    seeds: [n] int32.  Returns [B, n] int8 indications.
+
+    ``interpret=None`` (the default) auto-selects from the JAX backend:
+    compiled on TPU, interpret mode elsewhere.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _bloom_probe_jit(bits, keys, seeds, k=k, key_block=key_block,
+                            interpret=bool(interpret))

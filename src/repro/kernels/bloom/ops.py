@@ -1,7 +1,8 @@
 """Jitted public wrappers for the Bloom-probe kernel.
 
-``bloom_probe`` auto-selects the Pallas kernel (interpret=True on CPU,
-compiled on TPU) and pads inputs to kernel-friendly shapes.
+``bloom_probe`` pads inputs to kernel-friendly shapes; interpret mode is
+auto-selected from the JAX backend (compiled on TPU, interpret elsewhere)
+unless overridden via ``interpret=``.
 """
 from __future__ import annotations
 
@@ -15,21 +16,20 @@ from repro.kernels.bloom.bloom import BYTE_BLOCK, DEFAULT_KEY_BLOCK, bloom_probe
 from repro.kernels.bloom.ref import bloom_probe_ref, build_indicator_ref
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
 def build_indicator(keys, m: int, k: int, seed: int = 0):
     """Device-side byte-packed indicator for a key set (router replicas)."""
     keys = jnp.asarray(keys)
     return build_indicator_ref(keys, m, k, seed)
 
 
-def bloom_probe(bits, keys, *, k: int, seeds=None, use_pallas: bool = True):
+def bloom_probe(bits, keys, *, k: int, seeds=None, use_pallas: bool = True,
+                interpret: bool = None):
     """Batched probe of n stale indicator replicas.
 
     bits: [n, m_bytes] uint8; keys: [B] integer.  Returns [B, n] int8.
     Pads B to the kernel key block and m_bytes to the byte block.
+    ``interpret=None`` auto-selects from the JAX backend (compiled on TPU,
+    interpret mode elsewhere).
     """
     bits = jnp.asarray(bits, jnp.uint8)
     keys = jnp.asarray(keys)
@@ -55,5 +55,5 @@ def bloom_probe(bits, keys, *, k: int, seeds=None, use_pallas: bool = True):
         raise ValueError(
             f"m_bytes={mbytes} must be a multiple of {BYTE_BLOCK} "
             f"(size filters as m = bpe*C rounded to {BYTE_BLOCK * 8} bits)")
-    out = bloom_probe_pallas(bits, keys, seeds_arr, k=k, interpret=_on_cpu())
+    out = bloom_probe_pallas(bits, keys, seeds_arr, k=k, interpret=interpret)
     return out[:b]

@@ -124,7 +124,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
 
     mem = _mem_analysis(compiled)
     print(f"memory_analysis: {mem}")
-    cost = dict(compiled.cost_analysis() or {})
+    # cost_analysis() returns one dict on current JAX, a list of per-device
+    # dicts on older releases
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost = dict(cost)
     print(f"cost_analysis (loops-once): flops={cost.get('flops')} "
           f"bytes={cost.get('bytes accessed')}")
     hlo = compiled.as_text()

@@ -1,0 +1,138 @@
+"""Fast-engine parity and batched-estimator equivalence tests.
+
+The fast engine (``repro.cachesim.fastpath``) must be a BIT-EXACT twin of
+the reference scalar loop for every model-based policy: same SimResult
+(including the raw float/int accumulators, not just the rounded dict) and
+the same end-of-run system state.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cachesim import SimConfig, Simulator, get_trace
+from repro.cachesim.traces import TRACES
+from repro.core.estimator import QEstimator
+
+N = 8_000
+POLICIES = ("fna", "fno", "pi", "hocs")
+
+
+def _run_pair(policy, trace, **cfg_kw):
+    costs = cfg_kw.pop("costs", (2.0, 2.0, 2.0) if policy == "hocs"
+                       else (1.0, 2.0, 3.0))
+    cfg_kw.setdefault("update_interval", 200)
+    cfg_kw.setdefault("est_interval", 25)
+    base = SimConfig(cache_size=1_000, costs=costs, policy=policy, **cfg_kw)
+    ref_sim = Simulator(dataclasses.replace(base, engine="reference"))
+    fast_sim = Simulator(dataclasses.replace(base, engine="fast"))
+    return ref_sim, ref_sim.run(trace), fast_sim, fast_sim.run(trace)
+
+
+def _assert_results_identical(ref, fast):
+    assert fast.to_dict() == ref.to_dict()
+    # stronger than to_dict: the raw accumulators are bit-identical
+    assert fast.total_cost == ref.total_cost
+    for f in ("n_requests", "hits", "pos_accesses", "neg_accesses",
+              "fn_events", "fn_opportunities", "fp_events",
+              "fp_opportunities", "resident"):
+        assert getattr(fast, f) == getattr(ref, f), f
+
+
+@pytest.mark.parametrize("trace_name", TRACES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_fast_reference_parity(policy, trace_name):
+    trace = get_trace(trace_name, N, seed=7)
+    _, ref, _, fast = _run_pair(policy, trace)
+    _assert_results_identical(ref, fast)
+
+
+def test_fast_reference_state_parity():
+    """End-of-run SYSTEM state matches too: LRU contents and order, CBF
+    counters, stale bitmaps, FP/FN estimates, q-estimates, versions."""
+    trace = get_trace("gradle", N, seed=3)
+    ref_sim, _, fast_sim, _ = _run_pair("fna", trace)
+    for rn, fn_ in zip(ref_sim.nodes, fast_sim.nodes):
+        assert list(rn.lru.keys()) == list(fn_.lru.keys())
+        assert np.array_equal(rn.ind.cbf.counters, fn_.ind.cbf.counters)
+        assert fn_.ind.cbf.counters.dtype == np.uint8
+        assert np.array_equal(rn.ind.stale, fn_.ind.stale)
+        assert rn.ind.fp_est == fn_.ind.fp_est
+        assert rn.ind.fn_est == fn_.ind.fn_est
+        assert rn.version == fn_.version
+        assert (rn._since_adv, rn._since_est) == (fn_._since_adv, fn_._since_est)
+    for rq, fq in zip(ref_sim.q_est, fast_sim.q_est):
+        assert rq.q == fq.q
+        assert rq.version == fq.version
+        assert (rq._count, rq._positives) == (fq._count, fq._positives)
+
+
+def test_fast_parity_with_exhaustive_subroutine():
+    trace = get_trace("gradle", 5_000, seed=11)
+    _, ref, _, fast = _run_pair("fna", trace, alg="exhaustive")
+    _assert_results_identical(ref, fast)
+
+
+def test_fast_parity_across_update_intervals():
+    """Advertisement-epoch slicing must stay exact from fresh (tiny
+    interval) to very stale indicators."""
+    trace = get_trace("gradle", N, seed=5)
+    for interval in (16, 100, 1_000, 5_000):
+        _, ref, _, fast = _run_pair("fna", trace, update_interval=interval)
+        _assert_results_identical(ref, fast)
+
+
+def test_fna_cal_falls_back_to_reference():
+    """fna_cal mutates its EWMAs per probe (no frozen-view invariant), so
+    engine='fast' must transparently run the reference loop."""
+    trace = get_trace("gradle", 5_000, seed=2)
+    cfg = SimConfig(cache_size=1_000, update_interval=200, policy="fna_cal")
+    ref = Simulator(dataclasses.replace(cfg, engine="reference")).run(trace)
+    fast = Simulator(dataclasses.replace(cfg, engine="fast")).run(trace)
+    _assert_results_identical(ref, fast)
+
+
+def test_qestimator_batch_equivalence():
+    """observe_batch over arbitrary chunkings == per-element observe."""
+    rng = np.random.default_rng(0)
+    obs = rng.random(1_037) < 0.37
+    scalar = QEstimator(horizon=100, delta=0.25)
+    for o in obs:
+        scalar.observe(bool(o))
+    for split in ([3, 10, 250, 251, 600, 1000], [100], [1036], []):
+        batched = QEstimator(horizon=100, delta=0.25)
+        crossed = 0
+        for chunk in np.array_split(obs, split):
+            crossed += batched.observe_batch(chunk)
+        assert batched.q == scalar.q
+        assert batched.version == scalar.version == crossed
+        assert (batched._count, batched._positives) == \
+            (scalar._count, scalar._positives)
+
+
+def test_selection_tables_match_scalar_ds_pgm():
+    """The batched JAX decision tables are bit-identical to the scalar
+    DS_PGM path, including the CS_FNO candidate restriction."""
+    from repro.core.batched import selection_tables
+    from repro.core.policies import ds_pgm
+
+    rng = np.random.default_rng(1)
+    n, v = 4, 17
+    costs = rng.uniform(0.5, 5.0, n)
+    pi = rng.uniform(0.0, 1.0, (v, n))
+    nu = rng.uniform(0.0, 1.0, (v, n))
+    m = 100.0
+    fna_tab = selection_tables(costs, pi, nu, m)
+    fno_tab = selection_tables(costs, pi, nu, m, fno=True)
+    for vi in range(v):
+        for p in range(1 << n):
+            rhos = [pi[vi, j] if (p >> j) & 1 else nu[vi, j] for j in range(n)]
+            assert sorted(np.nonzero(fna_tab[vi, p])[0]) == \
+                ds_pgm(costs, rhos, m)
+            pos = [j for j in range(n) if (p >> j) & 1]
+            want = []
+            if pos:
+                sub = ds_pgm([costs[j] for j in pos],
+                             [pi[vi, j] for j in pos], m)
+                want = sorted(pos[t] for t in sub)
+            assert sorted(np.nonzero(fno_tab[vi, p])[0]) == want
