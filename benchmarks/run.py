@@ -7,11 +7,17 @@ Prints ``name,us_per_call,derived`` CSV (one line per benchmark):
     host; derived = the relevant throughput/quality scalar.
 
 ``python -m benchmarks.run [--full] [--only section[,section...]]
-[--interpret auto|on|off]``
+[--interpret auto|on|off] [--json PATH]``
+
+``--json`` additionally writes every record as a JSON list of
+``{"name", "us_per_call", "derived"}`` objects — the CI bench-smoke job
+uploads it as the ``BENCH_sim.json`` artifact so the perf trajectory
+accumulates per commit, and gates on the headline speedups.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -88,6 +94,8 @@ def main() -> None:
     ap.add_argument("--interpret", choices=("auto", "on", "off"), default="auto",
                     help="Pallas interpret mode for kernel benches "
                          "(auto = from JAX backend: compiled on TPU)")
+    ap.add_argument("--json", default="",
+                    help="also write records to this path as JSON")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     interpret = {"auto": None, "on": True, "off": False}[args.interpret]
@@ -99,6 +107,7 @@ def main() -> None:
         "sim": sim_benches,
         "serving": serving_bench,
     }
+    records = []
     print("name,us_per_call,derived")
     for sec, fn in sections.items():
         if only and sec not in only:
@@ -106,6 +115,11 @@ def main() -> None:
         for name, us, derived in fn(args.full):
             print(f"{name},{us:.3f},{derived:.6g}")
             sys.stdout.flush()
+            records.append({"name": name, "us_per_call": us,
+                            "derived": float(derived)})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
 
 
 if __name__ == "__main__":

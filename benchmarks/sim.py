@@ -1,16 +1,20 @@
 """Simulator throughput benchmarks: requests/sec per policy x trace on the
-fast engine, plus the headline fast-vs-reference comparison
-(``sim_throughput_*`` / ``sim_speedup_fna_gradle``).
+fast engine, the headline fast-vs-reference comparisons
+(``sim_speedup_fna_gradle``, ``sim_speedup_fna_cal_gradle``), and the
+shared-SystemTrace amortisation of multi-policy runs
+(``sweep_amortisation``).
 
 CSV columns: us_per_call = wall-clock per simulated request; derived =
-requests/sec (or the speedup factor for the ``sim_speedup`` row).
+requests/sec (or the speedup/amortisation factor for the ``sim_speedup`` /
+``sweep_amortisation`` rows).
 """
 from __future__ import annotations
 
 import time
 
-HEADLINE_REQUESTS = 200_000      # the acceptance benchmark (gradle, fna)
-POLICIES = ("fna", "fno", "pi", "hocs")
+HEADLINE_REQUESTS = 200_000      # the acceptance benchmark (gradle)
+POLICIES = ("fna", "fno", "pi", "hocs", "fna_cal")
+SWEEP_POLICIES = POLICIES
 
 
 def _run_once(cfg, trace):
@@ -22,24 +26,48 @@ def _run_once(cfg, trace):
 
 def run_sim_benches(full: bool):
     from repro.cachesim import SimConfig, get_trace
+    from repro.cachesim.simulator import run_policies
     from repro.cachesim.traces import TRACES
 
     out = []
-    # --- headline: fast vs reference, 200k-request gradle trace, fna ----
+    # --- headline: fast vs reference, 200k-request gradle trace ---------
+    # (fna exercises the table replay, fna_cal the speculative segmented
+    # replay — the acceptance thresholds track both)
     trace = get_trace("gradle", HEADLINE_REQUESTS, seed=0)
-    fast_cfg = SimConfig(engine="fast")
-    _run_once(fast_cfg, trace)       # warm numpy/XLA caches
-    dt_fast = min(_run_once(fast_cfg, trace) for _ in range(2))
     n_ref = HEADLINE_REQUESTS if full else HEADLINE_REQUESTS // 5
-    dt_ref = _run_once(SimConfig(engine="reference"), trace[:n_ref])
-    rps_fast = HEADLINE_REQUESTS / dt_fast
-    rps_ref = n_ref / dt_ref
-    out.append(("sim_throughput_fast_fna_gradle",
-                dt_fast / HEADLINE_REQUESTS * 1e6, rps_fast))
-    out.append(("sim_throughput_ref_fna_gradle",
-                dt_ref / n_ref * 1e6, rps_ref))
-    out.append(("sim_speedup_fna_gradle",
-                dt_fast / HEADLINE_REQUESTS * 1e6, rps_fast / rps_ref))
+    for policy in ("fna", "fna_cal"):
+        fast_cfg = SimConfig(engine="fast", policy=policy)
+        _run_once(fast_cfg, trace)       # warm numpy/XLA caches
+        dt_fast = min(_run_once(fast_cfg, trace) for _ in range(2))
+        dt_ref = _run_once(
+            SimConfig(engine="reference", policy=policy), trace[:n_ref])
+        rps_fast = HEADLINE_REQUESTS / dt_fast
+        rps_ref = n_ref / dt_ref
+        out.append((f"sim_throughput_fast_{policy}_gradle",
+                    dt_fast / HEADLINE_REQUESTS * 1e6, rps_fast))
+        out.append((f"sim_throughput_ref_{policy}_gradle",
+                    dt_ref / n_ref * 1e6, rps_ref))
+        out.append((f"sim_speedup_{policy}_gradle",
+                    dt_fast / HEADLINE_REQUESTS * 1e6, rps_fast / rps_ref))
+
+    # --- shared-SystemTrace amortisation: 1 sweep + P replays vs P full
+    # runs over the same (trace, system config); min-of-2 on both sides
+    # like the headline rows, so a load spike can't skew the ratio --------
+    n_amort = HEADLINE_REQUESTS if full else 150_000
+    tr = get_trace("gradle", n_amort, seed=0)
+    base = SimConfig(engine="fast", costs=(2.0, 2.0, 2.0))
+    run_policies(tr, base, policies=SWEEP_POLICIES)          # warm
+
+    def _time_policies(**kw):
+        t0 = time.time()
+        run_policies(tr, base, policies=SWEEP_POLICIES, **kw)
+        return time.time() - t0
+
+    dt_shared = min(_time_policies() for _ in range(2))
+    dt_indep = min(_time_policies(share_system=False) for _ in range(2))
+    out.append(("sweep_amortisation",
+                dt_shared / (n_amort * len(SWEEP_POLICIES)) * 1e6,
+                dt_indep / dt_shared))
 
     # --- requests/sec per policy x trace (fast engine) ------------------
     n_req = 100_000 if full else 30_000

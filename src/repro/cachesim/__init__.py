@@ -1,16 +1,21 @@
 """Trace-driven multi-cache simulation (paper Sec. V).
 
-Two bit-exact engines share the system model (``SimConfig.engine``):
-the per-request reference loop, and the epoch-batched fast engine
-(``repro.cachesim.fastpath``) built on two invariants — stale bitmaps
-only change at advertisement boundaries, and (pi, nu) views only change
-at ``(node.version, q_est.version)`` bumps, bounding distinct decisions
-by 2^n per view version.  See the ``repro.cachesim.simulator`` module
-docstring for the full invariant statement.
+Two bit-exact engines share the system model (``SimConfig.engine``): the
+per-request reference loop, and the shared-SystemTrace fast architecture —
+a policy-independent system sweep (``repro.cachesim.systemstate``)
+computed once per (trace, system config) and reused across policies,
+feeding per-policy replays: decision-table lookups for the model-based
+policies (``repro.cachesim.fastpath``) and a speculative segmented replay
+for the calibrated policy (``repro.cachesim.fna_cal_fast``).
+``run_policies`` and ``repro.cachesim.sweep`` exploit the sharing for
+policy x trace x interval grids.  See the ``repro.cachesim.simulator``
+module docstring for the invariant statement.
 """
 from repro.cachesim.lru import LRUCache
 from repro.cachesim.simulator import SimConfig, SimResult, Simulator, run_policies
+from repro.cachesim.sweep import run_sweep, sweep_records
+from repro.cachesim.systemstate import SystemTrace
 from repro.cachesim.traces import get_trace, TRACES
 
-__all__ = ["LRUCache", "SimConfig", "SimResult", "Simulator", "run_policies",
-           "get_trace", "TRACES"]
+__all__ = ["LRUCache", "SimConfig", "SimResult", "Simulator", "SystemTrace",
+           "run_policies", "run_sweep", "sweep_records", "get_trace", "TRACES"]

@@ -1,4 +1,4 @@
-"""Epoch-batched fast engine for the trace simulator.
+"""Fast engine, policy side: decision tables + vectorised replay.
 
 Bit-exact twin of ``Simulator._run_reference`` built on the invariants
 documented in the ``repro.cachesim.simulator`` module docstring (I1:
@@ -7,24 +7,22 @@ between version bumps) plus two structural facts the reference loop
 obscures:
 
   * the SYSTEM state (LRU contents, CBF counters, stale bitmaps, FP/FN
-    estimates, q-estimates) evolves independently of any model-based
-    policy's decisions — placement is by hash and every request is
-    placed in its designated cache (``fna_cal`` is the exception and
-    stays on the reference engine);
+    estimates, q-estimates) evolves independently of any policy's
+    decisions — placement is by hash and every request is placed in its
+    designated cache;
   * a key can only ever reside in its DESIGNATED cache, so each cache's
     dynamics depend only on its own designated subsequence of the trace.
 
 The engine therefore runs in phases:
 
-  1. STATE SWEEP, per cache: a tight LRU pass over the cache's
-     designated keys (the only inherently sequential work left), then an
-     event walk that jumps insertion-count arithmetic from one
-     estimate/advertise boundary to the next — CBF counter updates are
-     applied in bulk per window, and indications are computed per
-     advertisement segment as one vectorised ``all()`` reduction over
-     precomputed hash indices (I1, with EXACT segment ends).  Q-epoch
-     updates follow, batched per epoch.  Every (pi, nu) view change is
-     recorded as (request index it takes effect, values).
+  1. SYSTEM SWEEP — per-cache LRU passes, CBF event walks, vectorised
+     per-epoch indications, batched q-updates, and the full view-version
+     history.  This phase lives in ``repro.cachesim.systemstate`` and is
+     POLICY-INDEPENDENT: :func:`run_fast` computes a
+     :class:`~repro.cachesim.systemstate.SystemTrace` once per (trace,
+     system config) and ``run_policies``/``repro.cachesim.sweep`` reuse
+     one artifact across every policy, so a P-policy comparison costs one
+     sweep plus P cheap replays instead of P full runs.
 
   2. BATCHED TABLES — by I2, a decision within a view version is a pure
      function of the n-bit indication pattern, so the whole run needs at
@@ -37,11 +35,9 @@ The engine therefore runs in phases:
      lookups over the trace; only the service-cost accumulation stays a
      scalar fold so float-addition order matches the reference exactly.
 
-Deferred CBF bookkeeping parity: the reference path's fancy-index
-*assignment* counts duplicate probe indices of one key once, so buffered
-rows are deduplicated before the bulk ``np.add.at``; and since every
-remove is preceded by its matching add, no counter ever clamps at 0/255
-mid-stream, making the batched net update equal to the sequential one.
+``fna_cal`` breaks I2 — its empirical EWMAs move on every probe outcome —
+so phases 2-3 are replaced by the speculative segmented replay in
+``repro.cachesim.fna_cal_fast`` (same shared phase-1 artifact).
 
 Parity caveat: all state evolution and accounting here is replicated
 operation-for-operation, but the DS_PGM tables evaluate Eq. (10) through
@@ -55,238 +51,80 @@ combination tested.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import Optional
 
 import numpy as np
 
 from repro.cachesim.simulator import SimResult, Simulator
-from repro.core import hash_indices, hocs_fna
+from repro.cachesim.systemstate import SystemTrace
+from repro.core import hocs_fna
 from repro.core.policies import ds_pgm
 
 # 2^n tables per version: past this the reference loop is the better deal
 _MAX_TABLE_CACHES = 12
 
 
-def _dedup_rows(rows: np.ndarray) -> np.ndarray:
-    """Unique indices per row, flattened.  The reference CBF update uses
-    fancy-index assignment, so duplicate probe indices within one key must
-    count once."""
-    s = np.sort(rows, axis=1)
-    keep = np.ones(s.shape, dtype=bool)
-    keep[:, 1:] = s[:, 1:] != s[:, :-1]
-    return s[keep]
-
-
-def _lru_sweep(lru, trace: np.ndarray, pos: np.ndarray):
-    """Advance one cache's LRU through its designated subsequence.
-
-    Returns (membership-before-put per request, global positions of the
-    requests that inserted, evicted keys, insert index of each eviction).
-    Identical ops on the same OrderedDict as ``LRUCache.put`` would do.
-    """
-    d = lru._d
-    cap = lru.capacity
-    keys = trace[pos].tolist()
-    mem: List[bool] = []
-    ins_local: List[int] = []
-    evict_keys: List[int] = []
-    evict_iidx: List[int] = []
-    mem_append = mem.append
-    move_to_end = d.move_to_end
-    popitem = d.popitem
-    ins_append = ins_local.append
-    for li, x in enumerate(keys):
-        if x in d:
-            move_to_end(x)
-            mem_append(True)
-        else:
-            mem_append(False)
-            if len(d) >= cap:
-                ev, _ = popitem(False)
-                evict_keys.append(ev)
-                evict_iidx.append(len(ins_local))
-            d[x] = None
-            ins_append(li)
-    ins_gpos = pos[np.asarray(ins_local, dtype=np.int64)] if ins_local \
-        else np.empty(0, np.int64)
-    return (np.asarray(mem, dtype=bool), ins_gpos, evict_keys,
-            np.asarray(evict_iidx, dtype=np.int64))
-
-
-def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
-                    evict_keys, evict_iidx: np.ndarray,
-                    ind_all: np.ndarray, est_events: List[Tuple], N: int) -> None:
-    """Jump from one estimate/advertise boundary to the next (no
-    per-request work): bulk-apply the window's CBF updates, fire the same
-    ``estimate_rates``/``advertise`` calls the reference ``insert`` would,
-    fill this cache's indication column per advertisement segment, and
-    record (effective request index, fp, fn) for every version bump."""
-    cbf = nd.ind.cbf
-    cnt = cbf.counters.astype(np.int32)
-    cbf.counters = cnt              # estimate/advertise read through cbf
-    ins_rows = idx_j[ins_gpos]
-    ev_rows = hash_indices(np.asarray(evict_keys, dtype=np.uint64),
-                           cbf.k, cbf.m, cbf.seed) if evict_keys else None
-    n_ins = int(ins_gpos.shape[0])
-    seg_start = 0                   # indication segment start (request idx)
-    cur = 0                         # inserts flushed so far
-    ev_ptr = 0
-    next_est = nd.est_interval - nd._since_est
-    next_adv = nd.update_interval - nd._since_adv
-
-    def flush(upto: int) -> None:
-        nonlocal cur, ev_ptr
-        if upto <= cur:
-            return
-        np.add.at(cnt, _dedup_rows(ins_rows[cur:upto]), 1)
-        hi = int(np.searchsorted(evict_iidx, upto, side="left"))
-        if hi > ev_ptr:
-            np.subtract.at(cnt, _dedup_rows(ev_rows[ev_ptr:hi]), 1)
-            ev_ptr = hi
-        cur = upto
-
-    while True:
-        nxt = min(next_est, next_adv)
-        if nxt > n_ins:
-            break
-        flush(nxt)
-        g = int(ins_gpos[nxt - 1])  # request whose insert fired the event
-        bumps = 0
-        if next_est == nxt:         # reference order: estimate first
-            nd.ind.estimate_rates()
-            bumps += 1
-            next_est = nxt + nd.est_interval
-        if next_adv == nxt:
-            # indications in [seg_start, g] used the OLD stale bitmap
-            np.all(nd.ind.stale[idx_j[seg_start:g + 1]], axis=1,
-                   out=ind_all[seg_start:g + 1, j])
-            nd.ind.advertise()
-            # a fresh advertisement resets the staleness estimates
-            nd.ind.estimate_rates()
-            bumps += 1
-            seg_start = g + 1
-            next_est = nxt + nd.est_interval
-            next_adv = nxt + nd.update_interval
-        nd.version += bumps
-        est_events.append((g + 1, 0, j, nd.ind.fp_est, nd.ind.fn_est))
-    flush(n_ins)
-    np.all(nd.ind.stale[idx_j[seg_start:N]], axis=1,
-           out=ind_all[seg_start:N, j])
-    cbf.counters = np.clip(cnt, 0, 255).astype(np.uint8)
-    nd._since_est = nd.est_interval - (next_est - n_ins)
-    nd._since_adv = nd.update_interval - (next_adv - n_ins)
-
-
-def _q_epoch_walk(q_est, ind_all: np.ndarray, N: int) -> List[Tuple]:
-    """Advance the q-estimators through the whole trace, one batched
-    ``_close_epoch`` per epoch boundary (bit-exact: positives are integer
-    counts).  Returns (effective request index, q) events per cache."""
-    events: List[Tuple] = []
-    horizon = q_est[0].horizon
-    first = horizon - q_est[0]._count   # requests closing the first epoch
-    bounds = range(first, N + 1, horizon)
-    for j, qe in enumerate(q_est):
-        col = ind_all[:, j]
-        prev = 0
-        for b in bounds:            # each slice closes exactly one epoch
-            qe.observe_batch(col[prev:b])
-            events.append((b - 1, 1, j, qe.q))
-            prev = b
-        qe.observe_batch(col[prev:N])   # partial tail
-    return events
-
-
-def _assemble_versions(n: int, fp0, fn0, q0, events, N: int):
-    """Replay the recorded estimate/q events chronologically into the
-    (pi, nu) view-version history — the same floats ``_refresh_views``
-    would produce at each decision.  Returns (versions, points) where
-    points[i] = (first request index using versions[i], version id)."""
-    from repro.core.model import exclusion_probabilities, hit_ratio_from_q
-    fp, fn, q = list(fp0), list(fn0), list(q0)
-    pi = [0.0] * n
-    nu = [0.0] * n
-
-    def view(js) -> None:
-        for j in js:
-            h = hit_ratio_from_q(q[j], fp[j], fn[j])
-            pi[j], nu[j] = exclusion_probabilities(h, fp[j], fn[j])
-
-    view(range(n))
-    versions = [(tuple(pi), tuple(nu))]
-    points = [(0, 0)]
-    events = sorted(events)
-    i = 0
-    while i < len(events):
-        eff = events[i][0]
-        touched = set()
-        while i < len(events) and events[i][0] == eff:
-            _, kind, j = events[i][:3]
-            if kind == 0:
-                fp[j], fn[j] = events[i][3], events[i][4]
-            else:
-                q[j] = events[i][3]
-            touched.add(j)
-            i += 1
-        if eff >= N:        # bump on the last request: no decision left
-            continue
-        view(touched)
-        v = (tuple(pi), tuple(nu))
-        if versions[-1] != v:
-            versions.append(v)
-            points.append((eff, len(versions) - 1))
-    return versions, points
-
-
-def _selection_masks(sim: Simulator, versions, costs, miss_penalty: float
-                     ) -> np.ndarray:
+def _selection_masks(sim: Simulator, pi_v: np.ndarray, nu_v: np.ndarray,
+                     costs, miss_penalty: float) -> np.ndarray:
     """[V * 2^n] selection bitmasks — phase 2, one row per (version,
     indication-pattern) pair."""
     cfg = sim.cfg
     n = cfg.n_caches
     k = 1 << n
+    v_count = pi_v.shape[0]
     pow2 = 1 << np.arange(n, dtype=np.int64)
     if cfg.policy == "hocs":   # Algorithm 1 on pooled homogeneous estimates
-        sel = np.empty(len(versions) * k, dtype=np.int64)
-        for v, (pi, nu) in enumerate(versions):
-            pi_h = sum(pi) / n
-            nu_h = sum(nu) / n
+        pos_by_p = [[j for j in range(n) if (p >> j) & 1] for p in range(k)]
+        neg_by_p = [[j for j in range(n) if not (p >> j) & 1]
+                    for p in range(k)]
+        sel = np.empty(v_count * k, dtype=np.int64)
+        for v in range(v_count):
+            # left-to-right Python sum: bit-identical to the reference
+            # loop's sum(self._pi)/n (np.sum pairwise-accumulates for
+            # n >= 8, which can differ in the last ulp)
+            pi_h = sum(pi_v[v].tolist()) / n
+            nu_h = sum(nu_v[v].tolist()) / n
+            # (r0*, r1*) depends on the pattern only through its popcount
+            r_by_nx = [hocs_fna(nx, n, pi_h, nu_h, miss_penalty)
+                       for nx in range(n + 1)]
             for p in range(k):
-                pos = [j for j in range(n) if (p >> j) & 1]
-                neg = [j for j in range(n) if not (p >> j) & 1]
-                r0, r1 = hocs_fna(len(pos), n, pi_h, nu_h, miss_penalty)
+                pos = pos_by_p[p]
+                r0, r1 = r_by_nx[len(pos)]
                 m = 0
-                for j in pos[:r1] + neg[:r0]:
+                for j in pos[:r1] + neg_by_p[p][:r0]:
                     m |= 1 << j
                 sel[v * k + p] = m
         return sel
     if sim.alg is ds_pgm:      # the batched JAX path (float64 — bit-exact)
         from repro.core.batched import selection_tables
-        pi_mat = np.asarray([v[0] for v in versions], np.float64)
-        nu_mat = np.asarray([v[1] for v in versions], np.float64)
+        pi_mat, nu_mat = pi_v, nu_v
         # pad V to a power-of-two bucket: XLA compiles per shape, and
         # bucketing makes shapes recur across runs (padding rows are
         # copies of the last version; their masks are discarded)
-        v = pi_mat.shape[0]
-        vpad = 1 << max(4, (v - 1).bit_length())
-        if vpad > v:
-            pi_mat = np.concatenate([pi_mat, np.repeat(pi_mat[-1:], vpad - v, 0)])
-            nu_mat = np.concatenate([nu_mat, np.repeat(nu_mat[-1:], vpad - v, 0)])
+        vpad = 1 << max(4, (v_count - 1).bit_length())
+        if vpad > v_count:
+            pi_mat = np.concatenate(
+                [pi_mat, np.repeat(pi_mat[-1:], vpad - v_count, 0)])
+            nu_mat = np.concatenate(
+                [nu_mat, np.repeat(nu_mat[-1:], vpad - v_count, 0)])
         mask = selection_tables(costs, pi_mat, nu_mat, miss_penalty,
                                 fno=(cfg.policy == "fno"))
-        return (mask.reshape(-1, n)[:v * k] @ pow2).astype(np.int64)
+        return (mask.reshape(-1, n)[:v_count * k] @ pow2).astype(np.int64)
     # generic subroutine (e.g. exhaustive): scalar call per (version, pattern)
-    sel = np.empty(len(versions) * k, dtype=np.int64)
-    for v, (pi, nu) in enumerate(versions):
+    sel = np.empty(v_count * k, dtype=np.int64)
+    for v in range(v_count):
+        pi, nu = pi_v[v], nu_v[v]
         for p in range(k):
             if cfg.policy == "fno":
                 pos = [j for j in range(n) if (p >> j) & 1]
                 chosen = []
                 if pos:
                     sub = sim.alg([costs[j] for j in pos],
-                                  [pi[j] for j in pos], miss_penalty)
+                                  [float(pi[j]) for j in pos], miss_penalty)
                     chosen = [pos[t] for t in sub]
             else:
-                rhos = [pi[j] if (p >> j) & 1 else nu[j] for j in range(n)]
+                rhos = [float(pi[j]) if (p >> j) & 1 else float(nu[j])
+                        for j in range(n)]
                 chosen = sim.alg(costs, rhos, miss_penalty)
             m = 0
             for j in chosen:
@@ -295,93 +133,79 @@ def _selection_masks(sim: Simulator, versions, costs, miss_penalty: float
     return sel
 
 
-def run_fast(sim: Simulator, trace: np.ndarray, res: SimResult) -> SimResult:
+def accumulate_replay(res: SimResult, st: SystemTrace, selm: np.ndarray,
+                      costs, miss_penalty: float) -> SimResult:
+    """Fold per-request selection bitmasks into the SimResult exactly as
+    the reference loop would: per-mask cost sums in ascending cache order,
+    hit iff the designated cache is both selected and resident, and a
+    scalar float fold so cost-addition order matches bit-for-bit."""
+    n = st.n
+    k = 1 << n
+    acc_by_mask = np.asarray(
+        [sum(costs[j] for j in range(n) if (m >> j) & 1) for m in range(k)],
+        np.float64)
+    popcount = np.asarray([bin(m).count("1") for m in range(k)], np.int64)
+    hit_arr = st.in_dj & (((selm >> st.dj_all) & 1) != 0)
+    acc = acc_by_mask[selm]
+    cost_arr = np.where(hit_arr, acc, acc + miss_penalty)
+    pos_acc = int(popcount[selm & st.pats].sum())
+    total_cost = res.total_cost
+    for c in cost_arr.tolist():
+        total_cost += c
+    res.total_cost = total_cost
+    res.hits += int(np.count_nonzero(hit_arr))
+    res.pos_accesses += pos_acc
+    res.neg_accesses += int(popcount[selm].sum()) - pos_acc
+    res.n_requests += st.trace_len
+    return res
+
+
+def run_fast(sim: Simulator, trace: np.ndarray, res: SimResult,
+             system: Optional[SystemTrace] = None) -> SimResult:
     cfg = sim.cfg
     n = cfg.n_caches
     if n > _MAX_TABLE_CACHES:
         return sim._run_reference(trace, res)
     costs = list(cfg.costs)
     M = cfg.miss_penalty
-    nodes = sim.nodes
-    is_pi = cfg.policy == "pi"
     N = int(trace.shape[0])
     if N == 0:
         return res
 
-    dj_all = sim._designated_batch(trace)
-    pos_by_node = [np.flatnonzero(dj_all == j) for j in range(n)]
-    idx_all = [hash_indices(trace, nd.ind.cbf.k, nd.ind.cbf.m, nd.ind.cbf.seed)
-               for nd in nodes]
-    # view inputs at entry — events below record every later change
-    fp0 = [nd.ind.fp_est for nd in nodes]
-    fn0 = [nd.ind.fn_est for nd in nodes]
-    q0 = [qe.q for qe in sim.q_est]
+    # --- phase 1: the shared system sweep (or a reused artifact) --------
+    if system is None:
+        system = SystemTrace.compute(sim, trace)
+    else:
+        system.install(sim, trace)
+    sim.last_system = system
+    st = system
+    st.add_quality(res)
 
-    # --- phase 1: state sweep (per cache, then q epochs) ----------------
-    ind_all = np.empty((N, n), dtype=bool)
-    in_dj = np.empty(N, dtype=bool)     # designated-cache membership
-    events: List[Tuple] = []
-    for j, nd in enumerate(nodes):
-        pos = pos_by_node[j]
-        mem, ins_gpos, evict_keys, evict_iidx = _lru_sweep(nd.lru, trace, pos)
-        in_dj[pos] = mem
-        _cbf_event_walk(nd, j, idx_all[j], ins_gpos, evict_keys, evict_iidx,
-                        ind_all, events, N)
-    events.extend(_q_epoch_walk(sim.q_est, ind_all, N))
+    if cfg.policy == "fna_cal":
+        from repro.cachesim.fna_cal_fast import replay_fna_cal
+        return replay_fna_cal(sim, st, res)
 
-    # indicator-quality measurement on the designated cache (Fig. 1)
-    for j in range(n):
-        pos = pos_by_node[j]
-        md = in_dj[pos]
-        id_ = ind_all[pos, j]
-        held = int(np.count_nonzero(md))
-        res.fn_opportunities += held
-        res.resident += held
-        res.fn_events += int(np.count_nonzero(md & ~id_))
-        res.fp_opportunities += int(pos.shape[0]) - held
-        res.fp_events += int(np.count_nonzero(~md & id_))
-
-    pow2 = 1 << np.arange(n, dtype=np.int64)
-    pats_np = ind_all @ pow2            # n-bit indication pattern per request
-    if is_pi:
+    if cfg.policy == "pi":
         # PI accesses the cheapest cache truly holding x; hash placement
         # means only the designated cache can — so it IS the selection
-        cost_arr = np.where(in_dj, np.asarray(costs, np.float64)[dj_all], M)
-        hits = int(np.count_nonzero(in_dj))
-        posm = ((pats_np >> dj_all) & 1).astype(bool) & in_dj
+        cost_arr = np.where(st.in_dj,
+                            np.asarray(costs, np.float64)[st.dj_all], M)
+        hits = int(np.count_nonzero(st.in_dj))
+        posm = ((st.pats >> st.dj_all) & 1).astype(bool) & st.in_dj
         pos_acc = int(np.count_nonzero(posm))
-        neg_acc = hits - pos_acc
-    else:
-        # --- phase 2: every (version, pattern) selection in one batch ---
-        k = 1 << n
-        versions, points = _assemble_versions(n, fp0, fn0, q0, events, N)
-        selmask = _selection_masks(sim, versions, costs, M)     # [V * 2^n]
-        # per-selection-bitmask exact cost sums (reference summation order)
-        acc_by_mask = np.asarray(
-            [sum(costs[j] for j in range(n) if (m >> j) & 1) for m in range(k)],
-            np.float64)
-        popcount = np.asarray([bin(m).count("1") for m in range(k)], np.int64)
-        # --- phase 3: vectorised replay ---------------------------------
-        starts = np.asarray([p[0] for p in points] + [N], np.int64)
-        ids = np.asarray([p[1] for p in points], np.int64)
-        ver_per_req = np.repeat(ids, np.diff(starts))
-        selm = selmask[ver_per_req * k + pats_np]               # [N]
-        # a hit needs the designated cache selected AND the key resident
-        hit_arr = in_dj & (((selm >> dj_all) & 1) != 0)
-        acc = acc_by_mask[selm]
-        cost_arr = np.where(hit_arr, acc, acc + M)
-        hits = int(np.count_nonzero(hit_arr))
-        pos_acc = int(popcount[selm & pats_np].sum())
-        neg_acc = int(popcount[selm].sum()) - pos_acc
+        total_cost = res.total_cost
+        for c in cost_arr.tolist():
+            total_cost += c
+        res.total_cost = total_cost
+        res.hits += hits
+        res.pos_accesses += pos_acc
+        res.neg_accesses += hits - pos_acc
+        res.n_requests += N
+        return res
 
-    # scalar fold keeps float-addition order identical to the reference
-    total_cost = res.total_cost
-    for c in cost_arr.tolist():
-        total_cost += c
-
-    res.total_cost = total_cost
-    res.hits += hits
-    res.pos_accesses += pos_acc
-    res.neg_accesses += neg_acc
-    res.n_requests += N
-    return res
+    # --- phase 2: every (version, pattern) selection in one batch -------
+    k = 1 << n
+    selmask = _selection_masks(sim, st.pi_v, st.nu_v, costs, M)  # [V * 2^n]
+    # --- phase 3: vectorised replay -------------------------------------
+    selm = selmask[st.ver_per_req * k + st.pats]                 # [N]
+    return accumulate_replay(res, st, selm, costs, M)

@@ -21,9 +21,23 @@ Engines
 ``SimConfig.engine`` selects between two bit-exact implementations:
 
   * ``"reference"`` — the per-request scalar loop (the oracle).
-  * ``"fast"``      — the epoch-batched loop in ``repro.cachesim.fastpath``.
+  * ``"fast"``      — the shared-SystemTrace architecture: a
+    policy-independent system sweep (``repro.cachesim.systemstate``)
+    feeding per-policy replays (``repro.cachesim.fastpath`` for the
+    model-based policies, ``repro.cachesim.fna_cal_fast`` for the
+    calibrated one).
 
-The fast engine exploits two exact invariants of the system model:
+The fast architecture rests on one structural fact and two exact
+invariants:
+
+  S (shared system state): the controller places every missed request in
+     its hash-designated cache, so the SYSTEM state — LRU contents, CBF
+     counters, stale bitmaps, Eq. 7-8 estimates, Eq. 9 q-estimates — is
+     the same for every policy.  Phase 1 therefore runs ONCE per (trace,
+     system config) as a :class:`~repro.cachesim.systemstate.SystemTrace`
+     and is reused across policies: :func:`run_policies` and
+     ``repro.cachesim.sweep`` pay one sweep plus a cheap replay per
+     policy.
 
   I1 (advertisement epochs): the client-visible STALE bitmaps only change
      when a cache advertises, which happens after ``update_interval``
@@ -35,19 +49,24 @@ The fast engine exploits two exact invariants of the system model:
   I2 (view versions): the client-side views (pi_j, nu_j) only move when
      ``(node.version, q_est.version)`` bumps — i.e. at FP/FN re-estimation
      (every ``est_interval`` insertions), at advertisements, and at
-     q-epoch boundaries (every ``q_horizon`` requests).  Between bumps the
-     policy's decision depends on the request ONLY through the n-bit
-     indication pattern, so there are at most 2^n distinct selections per
-     view version; the fast engine memoises the full decision table per
-     version (via the batched JAX ``ds_pgm_batched`` path) and turns
-     per-request policy calls into table lookups.
+     q-epoch boundaries (every ``q_horizon`` requests).  Between bumps a
+     model-based policy's decision depends on the request ONLY through the
+     n-bit indication pattern, so there are at most 2^n distinct
+     selections per view version; the fast engine memoises the full
+     decision table per version (via the batched JAX ``ds_pgm_batched``
+     path) and turns per-request policy calls into table lookups.
 
+``fna_cal`` breaks I2 (its empirical EWMAs move on every probe outcome),
+but its decisions still change only when a drifting rho crosses a DS_PGM
+decision boundary, so it replays in speculate-and-commit segments —
+frozen decision tables, exact batched EWMA trajectories, and a batched
+float64 verification pass per segment (``repro.cachesim.fna_cal_fast``).
 Everything else (LRU dynamics, CBF bookkeeping cadence, Eq. 7-9 updates,
 cost accounting order) is replicated operation-for-operation, so the two
-engines produce identical ``SimResult``s for all model-based policies.
-``fna_cal`` mutates its empirical EWMAs per probe outcome — its views can
-change on EVERY request, which breaks I2 — so it always runs on the
-reference engine.
+engines produce identical ``SimResult``s for every policy.  The only
+remaining reference-engine fallbacks: n_caches beyond the table budget,
+and ``fna_cal`` with the ``exhaustive`` subroutine (its verification pass
+is DS_PGM-specific).
 """
 from __future__ import annotations
 
@@ -87,8 +106,9 @@ class SimConfig:
     # costs; uses pooled pi/nu estimates and accesses the r1* cheapest
     # positive + r0* cheapest negative caches.
     alg: str = "ds_pgm"               # ds_pgm | exhaustive (subroutine)
-    engine: str = "fast"              # fast | reference (bit-exact twins;
-    # fna_cal always runs on the reference engine — see module docstring)
+    engine: str = "fast"              # fast | reference (bit-exact twins
+    # for every policy; fna_cal uses the speculative segmented replay of
+    # repro.cachesim.fna_cal_fast — see module docstring)
     seed: int = 0
     # --- fna_cal (beyond-paper): empirical exclusion-probability feedback ---
     # Eq. (7) counts BITS, inflating FN by ~k when staleness concentrates in
@@ -238,18 +258,25 @@ class Simulator:
                 self._pi[j], self._nu[j] = exclusion_probabilities(h, fp, fn)
                 self._view_ver[j] = ver
 
-    def run(self, trace: np.ndarray, result: Optional[SimResult] = None) -> SimResult:
+    def run(self, trace: np.ndarray, result: Optional[SimResult] = None,
+            system=None) -> SimResult:
+        """Simulate ``trace``.  ``system`` optionally supplies a shared
+        :class:`~repro.cachesim.systemstate.SystemTrace` computed by an
+        earlier fast run over the same (trace, system config) — the sweep
+        is then skipped and only the per-policy replay runs.  After a fast
+        run, the artifact is published as ``self.last_system``."""
         cfg = self.cfg
         res = result or SimResult(policy=cfg.policy)
         trace = np.asarray(trace, dtype=np.uint64)
         self._pi = [1.0] * cfg.n_caches
         self._nu = [1.0] * cfg.n_caches
         self._view_ver = [None] * cfg.n_caches
-        if cfg.engine == "fast" and cfg.policy != "fna_cal":
-            from repro.cachesim.fastpath import run_fast
-            return run_fast(self, trace, res)
         if cfg.engine not in ("fast", "reference"):
             raise ValueError(f"unknown engine {cfg.engine!r}")
+        if cfg.engine == "fast" and \
+                (cfg.policy != "fna_cal" or cfg.alg == "ds_pgm"):
+            from repro.cachesim.fastpath import run_fast
+            return run_fast(self, trace, res, system=system)
         return self._run_reference(trace, res)
 
     def _run_reference(self, trace: np.ndarray, res: SimResult) -> SimResult:
@@ -366,12 +393,23 @@ class Simulator:
 
 
 def run_policies(trace: np.ndarray, base: SimConfig,
-                 policies: Sequence[str] = ("fna", "fno", "pi")) -> Dict[str, SimResult]:
+                 policies: Sequence[str] = ("fna", "fno", "pi"),
+                 share_system: bool = True) -> Dict[str, SimResult]:
     """Run several policies over the same trace (independent sim instances —
-    cache dynamics are identical by construction)."""
+    cache dynamics are identical by construction).
+
+    On the fast engine the policy-independent system sweep is computed
+    exactly once: the first fast run's
+    :class:`~repro.cachesim.systemstate.SystemTrace` is handed to every
+    subsequent policy, which then only pays its table/replay phase.  Pass
+    ``share_system=False`` to force per-policy full runs (benchmarking)."""
     import dataclasses
     out = {}
+    system = None
     for p in policies:
         cfg = dataclasses.replace(base, policy=p)
-        out[p] = Simulator(cfg).run(trace)
+        sim = Simulator(cfg)
+        out[p] = sim.run(trace, system=system)
+        if share_system and system is None:
+            system = getattr(sim, "last_system", None)
     return out

@@ -1,0 +1,65 @@
+"""Policy x trace x update-interval sweep runner (paper Figs. 4-6 grids).
+
+The paper's headline claim — FNA matching FNO's cost with an order of
+magnitude fewer advertised bits — is established on multi-dimensional
+sweeps: every policy, over every workload, across a range of
+advertisement intervals.  The system evolution is policy-independent
+(hash placement), so each (trace, update_interval) grid cell computes its
+:class:`~repro.cachesim.systemstate.SystemTrace` exactly once and replays
+every policy against it (via :func:`repro.cachesim.simulator.
+run_policies`): a P-policy grid costs one system sweep per cell plus
+P cheap replays, instead of P full simulations.
+
+``update_interval`` is part of the SYSTEM configuration (it changes the
+advertisement cadence and hence the indicators themselves), so cells
+never share sweeps with each other — only policies within a cell do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.cachesim.simulator import SimConfig, SimResult, run_policies
+from repro.cachesim.traces import get_trace
+
+DEFAULT_POLICIES = ("fna", "fna_cal", "fno", "pi")
+
+
+def run_sweep(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
+              base: SimConfig,
+              update_intervals: Sequence[int],
+              policies: Sequence[str] = DEFAULT_POLICIES,
+              n_requests: int = 100_000,
+              ) -> Dict[Tuple[str, int], Dict[str, SimResult]]:
+    """Run the full grid; returns ``{(trace_name, interval): {policy:
+    SimResult}}``.
+
+    ``traces`` is either a mapping of name -> request array, or a
+    sequence of :func:`~repro.cachesim.traces.get_trace` names generated
+    at ``n_requests`` with ``base.seed``.
+    """
+    if not isinstance(traces, Mapping):
+        traces = {name: get_trace(name, n_requests, seed=base.seed)
+                  for name in traces}
+    out: Dict[Tuple[str, int], Dict[str, SimResult]] = {}
+    for name, trace in traces.items():
+        for interval in update_intervals:
+            cfg = dataclasses.replace(base, update_interval=int(interval))
+            out[(name, int(interval))] = run_policies(
+                trace, cfg, policies=policies)
+    return out
+
+
+def sweep_records(grid: Dict[Tuple[str, int], Dict[str, SimResult]]
+                  ) -> List[dict]:
+    """Flatten a :func:`run_sweep` grid into one record per (trace,
+    interval, policy) — ready for CSV/JSON dumps or plotting."""
+    records = []
+    for (name, interval), cell in grid.items():
+        for policy, res in cell.items():
+            rec = {"trace": name, "update_interval": interval}
+            rec.update(res.to_dict())
+            records.append(rec)
+    return records

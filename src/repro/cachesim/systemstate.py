@@ -1,0 +1,380 @@
+"""Policy-independent system-state sweep (phase 1 of the fast engine).
+
+The simulator's SYSTEM state — LRU contents, CBF counters, stale bitmaps,
+FP/FN estimates (Eqs. 7-8), q-estimates (Eq. 9) — evolves independently of
+any policy's access decisions: the controller places every missed request
+in its hash-designated cache, so cache dynamics are identical across
+policies by construction (paper Sec. V-A, the fair-comparison property).
+
+:class:`SystemTrace` materialises one full sweep of that evolution for a
+given (trace, system config) pair:
+
+  * per-request arrays: the n-bit indication pattern of every request
+    against the advertisement-frozen bitmaps (invariant I1), designated-
+    cache membership, and the designated cache id;
+  * the complete client-side view-version history — every (pi, nu) view
+    the reference loop's ``_refresh_views`` would compute, PLUS the raw
+    (fp, fn) estimates behind it (the calibrated policy's uninformative-
+    indicator test reads those directly), with the first request index at
+    which each version takes effect (invariant I2);
+  * the designated-cache indicator-quality counters (Fig. 1 measurement);
+  * a snapshot of the end-of-run system state, so a simulator that skips
+    the sweep still finishes in exactly the state a full run would leave.
+
+Because none of this depends on the policy, a policy x trace sweep pays
+for ONE system sweep and reuses it for every policy: ``run_policies`` and
+``repro.cachesim.sweep`` hand the artifact of the first fast run to every
+subsequent simulator, which then only executes the cheap per-policy
+table/replay phases (``repro.cachesim.fastpath``,
+``repro.cachesim.fna_cal_fast``).
+
+``SWEEPS_COMPUTED`` counts :meth:`SystemTrace.compute` calls — tests use
+it to prove a multi-policy run performed exactly one sweep.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import hash_indices
+
+# incremented on every full system sweep (amortisation observability)
+SWEEPS_COMPUTED = 0
+
+
+def _dedup_rows(rows: np.ndarray) -> np.ndarray:
+    """Unique indices per row, flattened.  The reference CBF update uses
+    fancy-index assignment, so duplicate probe indices within one key must
+    count once."""
+    s = np.sort(rows, axis=1)
+    keep = np.ones(s.shape, dtype=bool)
+    keep[:, 1:] = s[:, 1:] != s[:, :-1]
+    return s[keep]
+
+
+def _lru_sweep(lru, trace: np.ndarray, pos: np.ndarray):
+    """Advance one cache's LRU through its designated subsequence.
+
+    Returns (membership-before-put per request, global positions of the
+    requests that inserted, evicted keys, insert index of each eviction).
+    Identical ops on the same OrderedDict as ``LRUCache.put`` would do.
+    """
+    d = lru._d
+    cap = lru.capacity
+    keys = trace[pos].tolist()
+    mem: List[bool] = []
+    ins_local: List[int] = []
+    evict_keys: List[int] = []
+    evict_iidx: List[int] = []
+    mem_append = mem.append
+    move_to_end = d.move_to_end
+    popitem = d.popitem
+    ins_append = ins_local.append
+    for li, x in enumerate(keys):
+        if x in d:
+            move_to_end(x)
+            mem_append(True)
+        else:
+            mem_append(False)
+            if len(d) >= cap:
+                ev, _ = popitem(False)
+                evict_keys.append(ev)
+                evict_iidx.append(len(ins_local))
+            d[x] = None
+            ins_append(li)
+    ins_gpos = pos[np.asarray(ins_local, dtype=np.int64)] if ins_local \
+        else np.empty(0, np.int64)
+    return (np.asarray(mem, dtype=bool), ins_gpos, evict_keys,
+            np.asarray(evict_iidx, dtype=np.int64))
+
+
+def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
+                    evict_keys, evict_iidx: np.ndarray,
+                    ind_all: np.ndarray, est_events: List[Tuple], N: int) -> None:
+    """Jump from one estimate/advertise boundary to the next (no
+    per-request work): bulk-apply the window's CBF updates, fire the same
+    ``estimate_rates``/``advertise`` calls the reference ``insert`` would,
+    fill this cache's indication column per advertisement segment, and
+    record (effective request index, fp, fn) for every version bump."""
+    cbf = nd.ind.cbf
+    cnt = cbf.counters.astype(np.int32)
+    cbf.counters = cnt              # estimate/advertise read through cbf
+    ins_rows = idx_j[ins_gpos]
+    ev_rows = hash_indices(np.asarray(evict_keys, dtype=np.uint64),
+                           cbf.k, cbf.m, cbf.seed) if evict_keys else None
+    n_ins = int(ins_gpos.shape[0])
+    seg_start = 0                   # indication segment start (request idx)
+    cur = 0                         # inserts flushed so far
+    ev_ptr = 0
+    next_est = nd.est_interval - nd._since_est
+    next_adv = nd.update_interval - nd._since_adv
+
+    def flush(upto: int) -> None:
+        nonlocal cur, ev_ptr
+        if upto <= cur:
+            return
+        np.add.at(cnt, _dedup_rows(ins_rows[cur:upto]), 1)
+        hi = int(np.searchsorted(evict_iidx, upto, side="left"))
+        if hi > ev_ptr:
+            np.subtract.at(cnt, _dedup_rows(ev_rows[ev_ptr:hi]), 1)
+            ev_ptr = hi
+        cur = upto
+
+    while True:
+        nxt = min(next_est, next_adv)
+        if nxt > n_ins:
+            break
+        flush(nxt)
+        g = int(ins_gpos[nxt - 1])  # request whose insert fired the event
+        bumps = 0
+        if next_est == nxt:         # reference order: estimate first
+            nd.ind.estimate_rates()
+            bumps += 1
+            next_est = nxt + nd.est_interval
+        if next_adv == nxt:
+            # indications in [seg_start, g] used the OLD stale bitmap
+            np.all(nd.ind.stale[idx_j[seg_start:g + 1]], axis=1,
+                   out=ind_all[seg_start:g + 1, j])
+            nd.ind.advertise()
+            # a fresh advertisement resets the staleness estimates
+            nd.ind.estimate_rates()
+            bumps += 1
+            seg_start = g + 1
+            next_est = nxt + nd.est_interval
+            next_adv = nxt + nd.update_interval
+        nd.version += bumps
+        est_events.append((g + 1, 0, j, nd.ind.fp_est, nd.ind.fn_est))
+    flush(n_ins)
+    np.all(nd.ind.stale[idx_j[seg_start:N]], axis=1,
+           out=ind_all[seg_start:N, j])
+    cbf.counters = np.clip(cnt, 0, 255).astype(np.uint8)
+    nd._since_est = nd.est_interval - (next_est - n_ins)
+    nd._since_adv = nd.update_interval - (next_adv - n_ins)
+
+
+def _q_epoch_walk(q_est, ind_all: np.ndarray, N: int) -> List[Tuple]:
+    """Advance the q-estimators through the whole trace, one batched
+    ``_close_epoch`` per epoch boundary (bit-exact: positives are integer
+    counts).  Returns (effective request index, q) events per cache."""
+    events: List[Tuple] = []
+    horizon = q_est[0].horizon
+    first = horizon - q_est[0]._count   # requests closing the first epoch
+    bounds = range(first, N + 1, horizon)
+    for j, qe in enumerate(q_est):
+        col = ind_all[:, j]
+        prev = 0
+        for b in bounds:            # each slice closes exactly one epoch
+            qe.observe_batch(col[prev:b])
+            events.append((b - 1, 1, j, qe.q))
+            prev = b
+        qe.observe_batch(col[prev:N])   # partial tail
+    return events
+
+
+def _assemble_versions(n: int, fp0, fn0, q0, events, N: int):
+    """Replay the recorded estimate/q events chronologically into the
+    client view-version history — the same floats ``_refresh_views`` would
+    produce at each decision, plus the raw (fp, fn) behind them (the
+    calibrated blend reads those live).  Returns (pi_v, nu_v, fp_v, fn_v)
+    as [V, n] float64 arrays and ``points`` where points[i] = (first
+    request index using version i, version id)."""
+    from repro.core.model import exclusion_probabilities, hit_ratio_from_q
+    fp, fn, q = list(fp0), list(fn0), list(q0)
+    pi = [0.0] * n
+    nu = [0.0] * n
+
+    def view(js) -> None:
+        for j in js:
+            h = hit_ratio_from_q(q[j], fp[j], fn[j])
+            pi[j], nu[j] = exclusion_probabilities(h, fp[j], fn[j])
+
+    view(range(n))
+    versions = [(tuple(pi), tuple(nu), tuple(fp), tuple(fn))]
+    points = [(0, 0)]
+    events = sorted(events)
+    i = 0
+    while i < len(events):
+        eff = events[i][0]
+        touched = set()
+        while i < len(events) and events[i][0] == eff:
+            _, kind, j = events[i][:3]
+            if kind == 0:
+                fp[j], fn[j] = events[i][3], events[i][4]
+            else:
+                q[j] = events[i][3]
+            touched.add(j)
+            i += 1
+        if eff >= N:        # bump on the last request: no decision left
+            continue
+        view(touched)
+        v = (tuple(pi), tuple(nu), tuple(fp), tuple(fn))
+        if versions[-1] != v:
+            versions.append(v)
+            points.append((eff, len(versions) - 1))
+    pi_v = np.asarray([v[0] for v in versions], np.float64)
+    nu_v = np.asarray([v[1] for v in versions], np.float64)
+    fp_v = np.asarray([v[2] for v in versions], np.float64)
+    fn_v = np.asarray([v[3] for v in versions], np.float64)
+    return pi_v, nu_v, fp_v, fn_v, points
+
+
+def _is_fresh(sim) -> bool:
+    return (all(nd.version == 0 and len(nd.lru) == 0 and
+                nd._since_adv == 0 and nd._since_est == 0
+                for nd in sim.nodes) and
+            all(qe.version == 0 and qe._count == 0 and not qe._bootstrapped
+                for qe in sim.q_est))
+
+
+@dataclass
+class SystemTrace:
+    """One materialised system sweep, reusable across policies.
+
+    See the module docstring; produced by :meth:`compute` (which advances
+    the donor simulator's nodes in place) and consumed either by the same
+    simulator or — via :meth:`install` — by any other FRESH simulator with
+    an identical system configuration and trace."""
+    key: tuple
+    n: int
+    trace_len: int
+    ind_all: np.ndarray         # [N, n] bool — indications vs stale bitmaps
+    in_dj: np.ndarray           # [N] bool — designated-cache membership
+    dj_all: np.ndarray          # [N] int64 — designated cache per request
+    pats: np.ndarray            # [N] int64 — n-bit indication pattern
+    ver_per_req: np.ndarray     # [N] int64 — view-version id per request
+    pi_v: np.ndarray            # [V, n] float64 — per-version model views
+    nu_v: np.ndarray
+    fp_v: np.ndarray            # [V, n] float64 — raw estimates behind them
+    fn_v: np.ndarray
+    quality: Dict[str, int]     # designated-cache indicator-quality counters
+    final_state: dict           # end-of-run system state snapshot
+    from_fresh: bool
+    _trace: np.ndarray          # held only for identity checks on install
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def system_key(cfg) -> tuple:
+        """The SimConfig fields the system evolution depends on (policy,
+        costs, miss penalty and calibration knobs are decision-side only)."""
+        return (cfg.n_caches, cfg.cache_size, cfg.bpe, cfg.update_interval,
+                cfg.est_interval, cfg.q_horizon, cfg.q_delta, cfg.seed)
+
+    @classmethod
+    def compute(cls, sim, trace: np.ndarray) -> "SystemTrace":
+        """Run the full sweep on ``sim``'s nodes (advancing them in place
+        to the end-of-run state) and record everything any policy replay
+        needs."""
+        global SWEEPS_COMPUTED
+        SWEEPS_COMPUTED += 1
+        n = sim.cfg.n_caches
+        nodes = sim.nodes
+        N = int(trace.shape[0])
+        fresh = _is_fresh(sim)
+
+        dj_all = sim._designated_batch(trace)
+        pos_by_node = [np.flatnonzero(dj_all == j) for j in range(n)]
+        idx_all = [hash_indices(trace, nd.ind.cbf.k, nd.ind.cbf.m,
+                                nd.ind.cbf.seed) for nd in nodes]
+        # view inputs at entry — events below record every later change
+        fp0 = [nd.ind.fp_est for nd in nodes]
+        fn0 = [nd.ind.fn_est for nd in nodes]
+        q0 = [qe.q for qe in sim.q_est]
+
+        ind_all = np.empty((N, n), dtype=bool)
+        in_dj = np.empty(N, dtype=bool)     # designated-cache membership
+        events: List[Tuple] = []
+        for j, nd in enumerate(nodes):
+            pos = pos_by_node[j]
+            mem, ins_gpos, evict_keys, evict_iidx = _lru_sweep(nd.lru, trace, pos)
+            in_dj[pos] = mem
+            _cbf_event_walk(nd, j, idx_all[j], ins_gpos, evict_keys,
+                            evict_iidx, ind_all, events, N)
+        events.extend(_q_epoch_walk(sim.q_est, ind_all, N))
+
+        # indicator-quality measurement on the designated cache (Fig. 1)
+        quality = {"fn_events": 0, "fn_opportunities": 0, "fp_events": 0,
+                   "fp_opportunities": 0, "resident": 0}
+        for j in range(n):
+            pos = pos_by_node[j]
+            md = in_dj[pos]
+            id_ = ind_all[pos, j]
+            held = int(np.count_nonzero(md))
+            quality["fn_opportunities"] += held
+            quality["resident"] += held
+            quality["fn_events"] += int(np.count_nonzero(md & ~id_))
+            quality["fp_opportunities"] += int(pos.shape[0]) - held
+            quality["fp_events"] += int(np.count_nonzero(~md & id_))
+
+        pi_v, nu_v, fp_v, fn_v, points = _assemble_versions(
+            n, fp0, fn0, q0, events, N)
+        starts = np.asarray([p[0] for p in points] + [N], np.int64)
+        ids = np.asarray([p[1] for p in points], np.int64)
+        ver_per_req = np.repeat(ids, np.diff(starts))
+
+        pow2 = 1 << np.arange(n, dtype=np.int64)
+        pats = (ind_all @ pow2).astype(np.int64)
+
+        return cls(
+            key=cls.system_key(sim.cfg), n=n, trace_len=N,
+            ind_all=ind_all, in_dj=in_dj, dj_all=dj_all, pats=pats,
+            ver_per_req=ver_per_req,
+            pi_v=pi_v, nu_v=nu_v, fp_v=fp_v, fn_v=fn_v,
+            quality=quality,
+            final_state=cls._snapshot(sim),
+            from_fresh=fresh, _trace=trace)
+
+    @staticmethod
+    def _snapshot(sim) -> dict:
+        return {
+            "nodes": [{
+                "lru_keys": list(nd.lru._d.keys()),
+                "counters": nd.ind.cbf.counters.copy(),
+                "stale": nd.ind.stale.copy(),
+                "fp_est": nd.ind.fp_est, "fn_est": nd.ind.fn_est,
+                "version": nd.version,
+                "since_adv": nd._since_adv, "since_est": nd._since_est,
+            } for nd in sim.nodes],
+            "q": [{
+                "q": qe.q, "version": qe.version, "count": qe._count,
+                "positives": qe._positives, "boot": qe._bootstrapped,
+            } for qe in sim.q_est],
+        }
+
+    # -- reuse -------------------------------------------------------------
+
+    def install(self, sim, trace: np.ndarray) -> None:
+        """Skip the sweep for a fresh, same-system simulator: put its nodes
+        directly into the recorded end-of-run state."""
+        if self.key != self.system_key(sim.cfg):
+            raise ValueError(
+                "SystemTrace system config mismatch: "
+                f"{self.key} != {self.system_key(sim.cfg)}")
+        if not self.from_fresh or not _is_fresh(sim):
+            raise ValueError("SystemTrace sharing requires fresh simulators")
+        if trace.shape[0] != self.trace_len or \
+                not np.array_equal(self._trace, trace):
+            raise ValueError("SystemTrace was computed for a different trace")
+        from collections import OrderedDict
+        for nd, snap in zip(sim.nodes, self.final_state["nodes"]):
+            nd.lru._d = OrderedDict.fromkeys(snap["lru_keys"])
+            nd.ind.cbf.counters = snap["counters"].copy()
+            nd.ind.stale = snap["stale"].copy()
+            nd.ind.fp_est = snap["fp_est"]
+            nd.ind.fn_est = snap["fn_est"]
+            nd.version = snap["version"]
+            nd._since_adv = snap["since_adv"]
+            nd._since_est = snap["since_est"]
+        for qe, snap in zip(sim.q_est, self.final_state["q"]):
+            qe.q = snap["q"]
+            qe.version = snap["version"]
+            qe._count = snap["count"]
+            qe._positives = snap["positives"]
+            qe._bootstrapped = snap["boot"]
+
+    def add_quality(self, res) -> None:
+        """Accumulate the (policy-independent) Fig. 1 counters."""
+        for k, v in self.quality.items():
+            setattr(res, k, getattr(res, k) + v)

@@ -104,6 +104,40 @@ def selection_tables(costs, pi, nu, miss_penalty, *, fno: bool = False) -> np.nd
     return out.reshape(v, k, n)
 
 
+def rho_selection_tables(costs, rhos, miss_penalty) -> np.ndarray:
+    """[B, n] float64 DS_PGM masks for an arbitrary per-request rho matrix.
+
+    The pattern-grid :func:`selection_tables` covers policies whose rho is
+    a pure (version, indication-pattern) function; the calibrated policy's
+    rho rows are instead keyed on its evolving calibration state (EWMA
+    values, probe counts, epsilon exploration), one row per request.  This
+    is the verification half of the ``fna_cal`` fast engine's
+    speculate-and-commit loop (``repro.cachesim.fna_cal_fast``): it runs
+    per speculation segment, so it is evaluated as a NumPy float64 mirror
+    of :func:`ds_pgm_batched` — same stable potential-gain argsort, same
+    ``exp(cumsum(log .))`` prefix evaluation, no per-segment dispatch
+    overhead.  Agreement with the scalar ``ds_pgm`` carries the same
+    ~1e-12 near-tie caveat documented on :func:`selection_tables`.
+    """
+    rhos = np.asarray(rhos, np.float64)
+    b, n = rhos.shape
+    costs = np.asarray(costs, np.float64)
+    M = float(miss_penalty)
+    logr = np.log(np.clip(rhos, EPS, 1.0 - EPS))
+    order = np.argsort(costs[None, :] / -logr, axis=1, kind="stable")
+    flat = order + (np.arange(b) * n)[:, None]      # row-flattened gather
+    csum = np.cumsum(costs[order], axis=1)
+    lprod = np.cumsum(logr.reshape(-1)[flat], axis=1)
+    phi = csum + M * np.exp(lprod)                  # prefix costs, i = 1..n
+    best = np.argmin(phi, axis=1)
+    # the empty prefix (cost M) wins ties, exactly like argmin over [M, phi]
+    take = np.where(phi[np.arange(b), best] < M, best + 1, 0)
+    pick_sorted = np.arange(n)[None, :] < take[:, None]
+    mask = np.empty((b, n), dtype=bool)
+    mask.reshape(-1)[flat] = pick_sorted
+    return mask
+
+
 def cs_fna_batched(indications, costs, q, fp, fn, miss_penalty) -> jax.Array:
     """Algorithm 2, batched: all caches candidates, rho by indication."""
     rhos = rho_matrix(indications, q, fp, fn)

@@ -67,6 +67,27 @@ class QEstimator:
         return self.q
 
 
+def ewma_path(e0: float, outcomes: np.ndarray, gamma: float) -> np.ndarray:
+    """Exact trajectory of the probe-feedback EWMA ``e <- (1-g)e + g a``.
+
+    ``outcomes`` are the {0, 1} probe results in arrival order; returns the
+    value AFTER each update, as float64.  The recurrence is applied one
+    scalar IEEE multiply-add at a time — i.e. it IS the reference loop's
+    update, so the returned path is bit-identical to updating per probe
+    (unlike an ``exp/cumsum`` closed form, whose rounding differs).  The
+    simulator's calibrated fast engine uses this to advance a whole
+    speculation segment's EWMA state in one call per (cache, branch).
+    """
+    a = np.asarray(outcomes, dtype=np.float64)
+    out = np.empty(a.shape[0], dtype=np.float64)
+    e = float(e0)
+    g = float(gamma)
+    for t, av in enumerate(a.tolist()):
+        e = (1.0 - g) * e + g * av
+        out[t] = e
+    return out
+
+
 class WindowedRatio:
     """Plain windowed ratio (used for measured FN/hit-rate reporting)."""
 

@@ -98,6 +98,35 @@ def ds_pgm(costs: Sequence[float], rhos: Sequence[float], miss_penalty: float
     return sorted(best_sel)
 
 
+def ds_pgm_mask(costs: Sequence[float], rhos: Sequence[float],
+                miss_penalty: float) -> int:
+    """:func:`ds_pgm` returning the selection as a bitmask.
+
+    Decision-identical to ``ds_pgm`` (same key values, same stable sort,
+    same EPS dead-band on the prefix scan) with the per-call overhead
+    stripped — this is the scalar inner call of the calibrated fast
+    engine's bridge/table paths, where it runs tens of thousands of times
+    per replay.
+    """
+    n = len(costs)
+    keys = [costs[j] / -math.log(min(max(rhos[j], EPS), 1.0 - EPS))
+            for j in range(n)]
+    order = sorted(range(n), key=keys.__getitem__)
+    best_mask = 0
+    best_cost = miss_penalty
+    run_mask = 0
+    run_cost, run_prod = 0.0, 1.0
+    for j in order:
+        run_cost += costs[j]
+        run_prod *= rhos[j]
+        run_mask |= 1 << j
+        v = run_cost + miss_penalty * run_prod
+        if v < best_cost - EPS:
+            best_cost = v
+            best_mask = run_mask
+    return best_mask
+
+
 def exhaustive(costs: Sequence[float], rhos: Sequence[float], miss_penalty: float
                ) -> Selection:
     """Exact minimiser of Eq. (10) over all 2^n subsets (n <= 20)."""

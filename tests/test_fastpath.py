@@ -67,6 +67,16 @@ def test_fast_reference_state_parity():
         assert (rq._count, rq._positives) == (fq._count, fq._positives)
 
 
+def test_hocs_parity_many_caches():
+    """n_caches >= 8 exercises the pooled-estimate summation path where
+    np.sum's pairwise accumulation would diverge from the reference
+    loop's left-to-right Python sum in the last ulp."""
+    trace = get_trace("gradle", 3_000, seed=13)
+    _, ref, _, fast = _run_pair("hocs", trace, n_caches=9,
+                                costs=(2.0,) * 9)
+    _assert_results_identical(ref, fast)
+
+
 def test_fast_parity_with_exhaustive_subroutine():
     trace = get_trace("gradle", 5_000, seed=11)
     _, ref, _, fast = _run_pair("fna", trace, alg="exhaustive")
@@ -82,9 +92,11 @@ def test_fast_parity_across_update_intervals():
         _assert_results_identical(ref, fast)
 
 
-def test_fna_cal_falls_back_to_reference():
+def test_fna_cal_fast_parity_smoke():
     """fna_cal mutates its EWMAs per probe (no frozen-view invariant), so
-    engine='fast' must transparently run the reference loop."""
+    it replays via the speculative segmented engine
+    (``repro.cachesim.fna_cal_fast``) — still bit-exact.  Full coverage
+    lives in ``tests/test_fna_cal_fast.py``."""
     trace = get_trace("gradle", 5_000, seed=2)
     cfg = SimConfig(cache_size=1_000, update_interval=200, policy="fna_cal")
     ref = Simulator(dataclasses.replace(cfg, engine="reference")).run(trace)
