@@ -1,220 +1,409 @@
-"""Benchmarks reproducing the paper's tables/figures on synthetic traces.
+"""Paper-figure pipeline: scenarios -> grid runs -> artifacts -> curves.
 
-One function per figure.  Each returns (rows, derived) where rows are
-dicts (written to artifacts/bench/*.json) and ``derived`` is the headline
-scalar used in the run.py CSV.  ``full=True`` uses paper-scale parameters
-(1M requests, 10K caches); the default is a faithful reduced-scale sweep
-that finishes on one CPU core in minutes (same qualitative regimes: the
-update interval and cache size scale together, keeping interval/capacity
-ratios identical to the paper's).
+End-to-end reproduction of the paper's evaluation figures, driven by the
+declarative scenario registry (``repro.cachesim.scenarios``).  Every
+figure is one or more named scenarios; each scenario runs through the
+shared-SystemTrace grid runner (``repro.cachesim.sweep``) and lands as
+
+  * ``artifacts/figs/<scenario>.json`` — run metadata + flat per-
+    (trace, cell, policy) records + per-policy cost curves;
+  * ``artifacts/figs/<scenario>.csv``  — the same records, flat;
+  * ``artifacts/figs/<scenario>.png``  — cost-vs-axis curves (one panel
+    per trace, one line per policy), when matplotlib is available.
+
+CLI::
+
+    python -m benchmarks.paper_figs --list
+    python -m benchmarks.paper_figs --scenario fig4_gradle --json
+    python -m benchmarks.paper_figs --scenario all --smoke --json --csv
+    python -m benchmarks.paper_figs --figure fig4 --plot
+
+``--smoke`` runs each scenario at golden scale (seconds, CI-friendly);
+``--full`` at paper scale (1M requests).  The legacy per-figure entry
+points (``FIGS`` / :func:`run_fig`) remain for ``benchmarks/run.py`` and
+now simply execute the figure's scenarios and derive the same headline
+scalars as before.
 """
 from __future__ import annotations
 
-import dataclasses
+import argparse
+import csv
 import json
+import sys
 import time
 from pathlib import Path
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.cachesim import SimConfig, Simulator, get_trace
-from repro.cachesim.simulator import run_policies
+from repro.cachesim.scenarios import (
+    GOLDEN_SCENARIOS,
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    run_scenario,
+)
+from repro.cachesim.sweep import hashable_label
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+FIGS_DIR = Path(__file__).resolve().parent.parent / "artifacts" / "figs"
 
-
-def _scale(full: bool):
-    """(n_requests, cache_size, base_update_interval)."""
-    return (1_000_000, 10_000, 1_000) if full else (60_000, 2_000, 200)
-
-
-# ---------------------------------------------------------------------------
-# Fig. 1: false-negative ratio vs update interval (per bpe, per trace)
-# ---------------------------------------------------------------------------
-
-def fig1_fn_ratio(full: bool = False) -> Tuple[List[Dict], float]:
-    n_req, csize, _ = _scale(full)
-    intervals = [16, 64, 256, 1024, 4096, 8192] if full else [16, 64, 256, 1024, 2048]
-    rows = []
-    for trace_name in ("wiki", "gradle"):
-        trace = get_trace(trace_name, n_req, seed=1)
-        for bpe in (4.0, 14.0):
-            for interval in intervals:
-                cfg = SimConfig(cache_size=csize, update_interval=interval,
-                                bpe=bpe, policy="fno")
-                res = Simulator(cfg).run(trace)
-                rows.append({"trace": trace_name, "bpe": bpe,
-                             "update_interval": interval,
-                             "fn_ratio": res.fn_ratio, "fp_ratio": res.fp_ratio})
-    # headline: max observed FN ratio (paper: ">10% at interval >= 1K")
-    derived = max(r["fn_ratio"] for r in rows)
-    return rows, derived
-
-
-# ---------------------------------------------------------------------------
-# Fig. 3: normalized cost vs miss penalty, 4 traces
-# ---------------------------------------------------------------------------
-
-def fig3_miss_penalty(full: bool = False) -> Tuple[List[Dict], float]:
-    n_req, csize, interval = _scale(full)
-    rows = []
-    worst_gap = 0.0
-    for trace_name in ("wiki", "gradle", "scarab", "f2"):
-        trace = get_trace(trace_name, n_req, seed=1)
-        for M in (50.0, 100.0, 500.0):
-            base = SimConfig(cache_size=csize, update_interval=interval,
-                             miss_penalty=M)
-            res = run_policies(trace, base, policies=("fna", "fna_cal", "fno", "pi"))
-            pi = res["pi"].mean_cost
-            row = {"trace": trace_name, "M": M,
-                   "fna_norm": res["fna"].mean_cost / pi,
-                   "fna_cal_norm": res["fna_cal"].mean_cost / pi,
-                   "fno_norm": res["fno"].mean_cost / pi,
-                   "pi_cost": pi}
-            rows.append(row)
-            worst_gap = max(worst_gap, row["fno_norm"] - row["fna_norm"])
-    return rows, worst_gap
-
-
-# ---------------------------------------------------------------------------
-# Fig. 4: normalized cost vs update interval
-# ---------------------------------------------------------------------------
-
-def fig4_update_interval(full: bool = False) -> Tuple[List[Dict], float]:
-    n_req, csize, _ = _scale(full)
-    intervals = [16, 128, 512, 1024, 4096, 8192] if full else [16, 128, 512, 2048]
-    rows = []
-    for trace_name in ("wiki", "gradle"):
-        trace = get_trace(trace_name, n_req, seed=1)
-        for interval in intervals:
-            base = SimConfig(cache_size=csize, update_interval=interval)
-            res = run_policies(trace, base, policies=("fna", "fna_cal", "fno", "pi"))
-            pi = res["pi"].mean_cost
-            rows.append({"trace": trace_name, "update_interval": interval,
-                         "fna_norm": res["fna"].mean_cost / pi,
-                         "fna_cal_norm": res["fna_cal"].mean_cost / pi,
-                         "fno_norm": res["fno"].mean_cost / pi,
-                         "fna_neg_accesses": res["fna"].neg_accesses})
-    # headline: bandwidth-equivalence factor — largest interval where FNA
-    # still beats FNO at the SMALLEST interval (paper: "x16 less bandwidth")
-    derived = _bandwidth_equivalence(rows)
-    return rows, derived
-
-
-def _bandwidth_equivalence(rows) -> float:
-    """Largest interval ratio i_fna/i_fno such that FNA(cal) at the LARGE
-    interval still matches FNO at the small one (paper: "x16 less
-    bandwidth")."""
-    best = 1.0
-    for tr in {r["trace"] for r in rows}:
-        sub = sorted((r for r in rows if r["trace"] == tr),
-                     key=lambda r: r["update_interval"])
-        for lo in sub:
-            for hi in sub:
-                if hi["update_interval"] < lo["update_interval"]:
-                    continue
-                if hi["fna_cal_norm"] <= lo["fno_norm"] * 1.02:
-                    best = max(best, hi["update_interval"] / lo["update_interval"])
-    return best
-
-
-# ---------------------------------------------------------------------------
-# Fig. 5: normalized cost vs indicator size (bpe)
-# ---------------------------------------------------------------------------
-
-def fig5_indicator_size(full: bool = False) -> Tuple[List[Dict], float]:
-    n_req, csize, interval = _scale(full)
-    rows = []
-    for trace_name in ("wiki", "gradle"):
-        trace = get_trace(trace_name, n_req, seed=1)
-        for bpe in (2.0, 4.0, 8.0, 14.0, 22.0):
-            for mult in (1, 4):
-                base = SimConfig(cache_size=csize, bpe=bpe,
-                                 update_interval=interval * mult)
-                res = run_policies(trace, base, policies=("fna", "fna_cal", "fno", "pi"))
-                pi = res["pi"].mean_cost
-                rows.append({"trace": trace_name, "bpe": bpe,
-                             "update_interval": interval * mult,
-                             "fna_norm": res["fna"].mean_cost / pi,
-                             "fna_cal_norm": res["fna_cal"].mean_cost / pi,
-                             "fno_norm": res["fno"].mean_cost / pi})
-    # headline: does FNO ever DEGRADE with a larger indicator? (paper's anomaly)
-    derived = 0.0
-    for tr in ("wiki", "gradle"):
-        for ui_rows in [[r for r in rows if r["trace"] == tr and
-                         r["update_interval"] == interval * m] for m in (1, 4)]:
-            ui_rows.sort(key=lambda r: r["bpe"])
-            for a, b in zip(ui_rows, ui_rows[1:]):
-                derived = max(derived, b["fno_norm"] - a["fno_norm"])
-    return rows, derived
-
-
-# ---------------------------------------------------------------------------
-# Fig. 6: actual mean cost vs cache size
-# ---------------------------------------------------------------------------
-
-def fig6_cache_size(full: bool = False) -> Tuple[List[Dict], float]:
-    n_req = 300_000 if full else 80_000
-    sizes = (1_000, 4_000, 8_000, 16_000, 32_000) if full else (500, 1_000, 2_000, 4_000)
-    trace = get_trace("wiki", n_req, seed=2)
-    rows = []
-    for size in sizes:
-        for interval in (max(size // 8, 16), max(size // 2, 64)):
-            base = SimConfig(cache_size=size, update_interval=interval)
-            res = run_policies(trace, base, policies=("fna", "fna_cal", "fno", "pi"))
-            rows.append({"cache_size": size, "update_interval": interval,
-                         "fna_cost": res["fna"].mean_cost,
-                         "fna_cal_cost": res["fna_cal"].mean_cost,
-                         "fno_cost": res["fno"].mean_cost,
-                         "pi_cost": res["pi"].mean_cost})
-    # headline: capacity-equivalence — cost of FNA at smallest size vs FNO at
-    # largest (paper: FNA@4K beats FNO@32K)
-    small_fna = [r for r in rows if r["cache_size"] == sizes[0]]
-    big_fno = [r for r in rows if r["cache_size"] == sizes[-1]]
-    derived = min(r["fna_cal_cost"] for r in small_fna) / min(r["fno_cost"] for r in big_fno)
-    return rows, derived
-
-
-# ---------------------------------------------------------------------------
-# Fig. 7: number of caches (homogeneous costs = 2)
-# ---------------------------------------------------------------------------
-
-def fig7_num_caches(full: bool = False) -> Tuple[List[Dict], float]:
-    n_req, csize, interval = _scale(full)
-    trace = get_trace("gradle", n_req, seed=1)
-    rows = []
-    worst_gap = 0.0
-    for n in (2, 3, 5, 7):
-        for mult in (1, 4):
-            base = SimConfig(n_caches=n, costs=tuple([2.0] * n), cache_size=csize,
-                             update_interval=interval * mult)
-            res = run_policies(trace, base, policies=("fna", "fna_cal", "fno", "pi"))
-            pi = res["pi"].mean_cost
-            row = {"n_caches": n, "update_interval": interval * mult,
-                   "fna_norm": res["fna"].mean_cost / pi,
-                   "fna_cal_norm": res["fna_cal"].mean_cost / pi,
-                   "fno_norm": res["fno"].mean_cost / pi}
-            rows.append(row)
-            worst_gap = max(worst_gap, row["fno_norm"] - row["fna_norm"])
-    return rows, worst_gap
-
-
-FIGS = {
-    "fig1_fn_ratio": fig1_fn_ratio,
-    "fig3_miss_penalty": fig3_miss_penalty,
-    "fig4_update_interval": fig4_update_interval,
-    "fig5_indicator_size": fig5_indicator_size,
-    "fig6_cache_size": fig6_cache_size,
-    "fig7_num_caches": fig7_num_caches,
+# fixed policy -> style assignment (identity, never cycled); categorical
+# slots 1-4 of the skill-validated reference palette, and the PI lower
+# bound drawn as a neutral dashed baseline rather than a series hue.
+# Markers double as a CVD-safe secondary encoding.
+POLICY_STYLE = {
+    "fna":     dict(color="#2a78d6", marker="o", label="CS$_{FNA}$"),
+    "fna_cal": dict(color="#eb6834", marker="s", label="CS$_{FNA}$-cal"),
+    "fno":     dict(color="#1baf7a", marker="^", label="CS$_{FNO}$"),
+    "hocs":    dict(color="#eda100", marker="D", label="HoCS"),
+    "pi":      dict(color="#52514e", marker="", linestyle="--", label="PI"),
 }
 
 
-def run_fig(name: str, full: bool = False) -> Tuple[List[Dict], float, float]:
+def _scale(full: bool):
+    """(n_requests, cache_size, base_update_interval) — the reduced/full
+    scale pair benchmarks/run.py normalises us_per_call against."""
+    return (1_000_000, 10_000, 1_000) if full else (60_000, 2_000, 200)
+
+
+def _n_requests(sc: Scenario, full: bool) -> int:
+    return sc.n_requests_full if full else sc.n_requests
+
+
+# ---------------------------------------------------------------------------
+# Record shaping
+# ---------------------------------------------------------------------------
+
+def pivot_cells(records: Sequence[dict], axis: str) -> List[dict]:
+    """Group flat per-policy records into one dict per (scenario, trace,
+    cell): ``{"trace", axis, "cost": {policy: mean_cost}, ...}``.  Cells
+    keep first-seen order (the grid's sweep order); the scenario enters
+    the key because a multi-scenario figure (e.g. Fig. 5's two
+    cadences) revisits the same (trace, axis-value) pairs."""
+    cells: Dict[tuple, dict] = {}
+    for r in records:
+        key = (r.get("scenario"), r["trace"], hashable_label(r[axis]))
+        cell = cells.setdefault(key, {
+            "scenario": r.get("scenario"), "trace": r["trace"],
+            axis: r[axis], "cost": {},
+            "hit_ratio": {}, "neg_accesses": {},
+            "fn_ratio": r["fn_ratio"], "fp_ratio": r["fp_ratio"],
+        })
+        cell["cost"][r["policy"]] = r["mean_cost"]
+        cell["hit_ratio"][r["policy"]] = r["hit_ratio"]
+        cell["neg_accesses"][r["policy"]] = r["neg_accesses"]
+    return list(cells.values())
+
+
+def normalised(cell: dict) -> Dict[str, float]:
+    """Per-policy cost normalised by the PI lower bound (paper y-axis)."""
+    pi = cell["cost"].get("pi")
+    if not pi:
+        return dict(cell["cost"])
+    return {p: c / pi for p, c in cell["cost"].items()}
+
+
+def curves(records: Sequence[dict], axis: str) -> Dict[str, Dict[str, list]]:
+    """``{trace: {policy: [[x, mean_cost], ...]}}`` — the per-policy cost
+    curves the JSON artifact carries (x is the axis label; per-cache
+    tuples serialise as lists)."""
+    out: Dict[str, Dict[str, list]] = {}
+    for cell in pivot_cells(records, axis):
+        tr = out.setdefault(cell["trace"], {})
+        for policy, cost in cell["cost"].items():
+            tr.setdefault(policy, []).append([cell[axis], cost])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Derived headline scalars (one per paper figure)
+# ---------------------------------------------------------------------------
+
+def derived_fig1(records, axis="update_interval") -> float:
+    """Max observed FN ratio (paper: '>10% at interval >= 1K')."""
+    return max(r["fn_ratio"] for r in records)
+
+
+def derived_fig3(records, axis="miss_penalty") -> float:
+    """Worst normalised FNO-FNA gap across (trace, M)."""
+    gap = 0.0
+    for cell in pivot_cells(records, axis):
+        nc = normalised(cell)
+        gap = max(gap, nc["fno"] - nc["fna"])
+    return gap
+
+
+def derived_fig4(records, axis="update_interval") -> float:
+    """Bandwidth-equivalence factor: the largest interval ratio
+    i_fna / i_fno at which calibrated FNA still matches FNO's cost at the
+    SMALL interval (paper: 'x16 less bandwidth')."""
+    best = 1.0
+    cells = pivot_cells(records, axis)
+    for grp in {(c["scenario"], c["trace"]) for c in cells}:
+        sub = sorted((c for c in cells
+                      if (c["scenario"], c["trace"]) == grp),
+                     key=lambda c: c[axis])
+        for lo in sub:
+            for hi in sub:
+                if hi[axis] < lo[axis]:
+                    continue
+                if normalised(hi)["fna_cal"] <= normalised(lo)["fno"] * 1.02:
+                    best = max(best, hi[axis] / lo[axis])
+    return best
+
+
+def derived_fig5(records, axis="bpe") -> float:
+    """Largest FNO cost INCREASE from growing the indicator (the paper's
+    anomaly: more bits can hurt an FN-oblivious policy)."""
+    worst = 0.0
+    cells = pivot_cells(records, axis)
+    for grp in {(c["scenario"], c["trace"]) for c in cells}:
+        sub = sorted((c for c in cells
+                      if (c["scenario"], c["trace"]) == grp),
+                     key=lambda c: c[axis])
+        for a, b in zip(sub, sub[1:]):
+            worst = max(worst, normalised(b)["fno"] - normalised(a)["fno"])
+    return worst
+
+
+def derived_fig6(records, axis="cache_size") -> float:
+    """Capacity equivalence: calibrated-FNA cost at the smallest cache
+    over FNO cost at the largest (paper: FNA@4K beats FNO@32K => < 1)."""
+    cells = sorted(pivot_cells(records, axis), key=lambda c: c[axis])
+    return cells[0]["cost"]["fna_cal"] / cells[-1]["cost"]["fno"]
+
+
+def derived_fig7(records, axis="n_caches") -> float:
+    """Worst normalised FNO-FNA gap across cache counts."""
+    gap = 0.0
+    for cell in pivot_cells(records, axis):
+        nc = normalised(cell)
+        gap = max(gap, nc["fno"] - nc["fna"])
+    return gap
+
+
+#: legacy figure name -> (scenario names, derived metric)
+FIG_SCENARIOS: Dict[str, Tuple[Tuple[str, ...], object]] = {
+    "fig1_fn_ratio": (("fig1_staleness", "fig1_staleness_tight"),
+                      derived_fig1),
+    "fig3_miss_penalty": (("fig3_penalty",), derived_fig3),
+    "fig4_update_interval": (("fig4_gradle", "fig4_wiki"), derived_fig4),
+    "fig5_indicator_size": (("fig5_indicator_size",
+                             "fig5_indicator_size_fresh"), derived_fig5),
+    "fig6_cache_size": (("fig6_cache_size",), derived_fig6),
+    "fig7_num_caches": (("fig7_num_caches",), derived_fig7),
+}
+
+
+def _run_fig_records(name: str, full: bool) -> Tuple[List[dict], float]:
+    scenario_names, derive = FIG_SCENARIOS[name]
+    records: List[dict] = []
+    axis = None
+    for sc_name in scenario_names:
+        sc = get_scenario(sc_name)
+        axis = sc.axis
+        records.extend(run_scenario(sc, n_requests=_n_requests(sc, full)))
+    # one ROW per (scenario, trace, cell) — the per-config granularity the
+    # legacy figure functions reported, so benchmarks/run.py's
+    # us-per-request normalisation (n_requests * len(rows)) stays
+    # comparable across PRs rather than inflating with the policy count
+    return pivot_cells(records, axis), float(derive(records, axis=axis))
+
+
+def run_fig(name: str, full: bool = False) -> Tuple[List[dict], float, float]:
+    """Legacy entry point (benchmarks/run.py 'paper' section): run the
+    figure's scenarios, write artifacts/bench/<name>.json, return
+    (records, derived headline scalar, seconds)."""
     t0 = time.time()
-    rows, derived = FIGS[name](full)
+    rows, derived = _run_fig_records(name, full)
     dt = time.time() - t0
     ART.mkdir(parents=True, exist_ok=True)
     (ART / f"{name}.json").write_text(json.dumps(
         {"rows": rows, "derived": derived, "seconds": dt}, indent=1))
     return rows, derived, dt
+
+
+# legacy alias: benchmarks/run.py iterates these names and calls run_fig
+FIGS = FIG_SCENARIOS
+
+
+# ---------------------------------------------------------------------------
+# Scenario pipeline (CLI)
+# ---------------------------------------------------------------------------
+
+def plot_scenario(sc: Scenario, records: Sequence[dict], path: Path) -> bool:
+    """Cost-vs-axis curves: one panel per trace, one line per policy
+    (fixed palette slots; PI as a neutral dashed baseline).  Returns
+    False when matplotlib is unavailable."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return False
+    cells = pivot_cells(records, sc.axis)
+    traces = list(dict.fromkeys(c["trace"] for c in cells))
+    fig, axes = plt.subplots(1, len(traces),
+                             figsize=(4.6 * len(traces), 3.4),
+                             squeeze=False, sharey=True)
+    for ax, tr in zip(axes[0], traces):
+        sub = [c for c in cells if c["trace"] == tr]
+        xs = [c[sc.axis] for c in sub]
+        categorical = any(isinstance(x, (tuple, list)) for x in xs)
+        pos = list(range(len(xs))) if categorical else xs
+        for policy in sc.policies:
+            ys = [c["cost"].get(policy) for c in sub]
+            style = dict(POLICY_STYLE.get(policy, {"label": policy}))
+            label = style.pop("label", policy)
+            ax.plot(pos, ys, linewidth=2, markersize=6,
+                    label=label, **style)
+        if categorical:
+            ax.set_xticks(pos)
+            ax.set_xticklabels([str(x) for x in xs], fontsize=7)
+        elif len(xs) > 1 and xs[0] > 0 and xs[-1] / max(xs[0], 1e-9) >= 16:
+            ax.set_xscale("log", base=2)
+        ax.set_title(tr, fontsize=10)
+        ax.set_xlabel(sc.axis.replace("_", " "))
+        ax.grid(True, linewidth=0.5, alpha=0.35)
+        ax.spines[["top", "right"]].set_visible(False)
+    axes[0][0].set_ylabel("mean service cost")
+    axes[0][-1].legend(fontsize=8, frameon=False)
+    fig.suptitle(sc.name, fontsize=11)
+    fig.tight_layout()
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return True
+
+
+def run_scenario_pipeline(name: str, *, smoke: bool = False,
+                          full: bool = False,
+                          n_requests: Optional[int] = None,
+                          out_dir: Path = FIGS_DIR,
+                          write_json: bool = False, write_csv: bool = False,
+                          write_plot: bool = False,
+                          engine: str = "fast") -> dict:
+    """Run one scenario end-to-end and write the requested artifacts.
+    Returns ``{"scenario", "records", "seconds", "paths"}``."""
+    sc = get_scenario(name)
+    if n_requests is not None:
+        n_req = n_requests
+    elif smoke:
+        n_req = sc.golden_n_requests
+    else:
+        n_req = _n_requests(sc, full)
+    t0 = time.time()
+    # smoke runs the golden sub-grid: it is sized to stay non-degenerate
+    # at a few thousand requests, where the display grid's long cadences
+    # would produce all-miss cells
+    records = run_scenario(sc, n_requests=n_req, engine=engine, golden=smoke)
+    dt = time.time() - t0
+    paths: Dict[str, str] = {}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    if write_json:
+        p = out_dir / f"{sc.name}.json"
+        p.write_text(json.dumps({
+            "meta": {
+                "scenario": sc.name, "figure": sc.figure,
+                "description": sc.description, "axis": sc.axis,
+                "policies": list(sc.policies), "n_requests": n_req,
+                "grid": "golden" if smoke else "display",
+                "engine": engine, "seed": sc.seed, "seconds": round(dt, 3),
+            },
+            "records": records,
+            "curves": curves(records, sc.axis),
+        }, indent=1, default=list))
+        paths["json"] = str(p)
+    if write_csv:
+        p = out_dir / f"{sc.name}.csv"
+        fieldnames = list(dict.fromkeys(k for r in records for k in r))
+        with open(p, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fieldnames)
+            w.writeheader()
+            for r in records:
+                w.writerow({k: (list(v) if isinstance(v, tuple) else v)
+                            for k, v in r.items()})
+        paths["csv"] = str(p)
+    if write_plot:
+        p = out_dir / f"{sc.name}.png"
+        if plot_scenario(sc, records, p):
+            paths["png"] = str(p)
+        else:
+            print(f"[paper_figs] matplotlib unavailable; skipped {p.name}",
+                  file=sys.stderr)
+    return {"scenario": sc.name, "records": records, "seconds": dt,
+            "paths": paths}
+
+
+def _summary_line(out: dict, axis: str) -> str:
+    cells = pivot_cells(out["records"], axis)
+    polys = sorted({p for c in cells for p in c["cost"]})
+    parts = []
+    for p in polys:
+        vals = [c["cost"][p] for c in cells if p in c["cost"]]
+        parts.append(f"{p}={min(vals):.2f}..{max(vals):.2f}")
+    arts = ",".join(sorted(out["paths"])) or "no artifacts"
+    return (f"{out['scenario']}: {len(cells)} cells in "
+            f"{out['seconds']:.1f}s [{arts}]  " + " ".join(parts))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.paper_figs",
+        description="Scenario-driven paper-figure pipeline")
+    ap.add_argument("--scenario", action="append", default=[],
+                    help="scenario name (repeatable), or 'all'")
+    ap.add_argument("--figure", action="append", default=[],
+                    help="run every scenario of a figure (fig1..fig7, beyond)")
+    ap.add_argument("--list", action="store_true",
+                    help="list scenarios and exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run each scenario's golden sub-grid "
+                         "(seconds, non-degenerate; CI smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale runs (1M requests)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="override n_requests explicitly")
+    ap.add_argument("--json", action="store_true", help="write JSON artifact")
+    ap.add_argument("--csv", action="store_true", help="write CSV artifact")
+    ap.add_argument("--plot", action="store_true", help="write PNG curves")
+    ap.add_argument("--out", default=str(FIGS_DIR), help="artifact directory")
+    ap.add_argument("--engine", choices=("fast", "reference"), default="fast")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for sc in list_scenarios():
+            golden = " [golden]" if sc.name in GOLDEN_SCENARIOS else ""
+            print(f"{sc.name:24s} {sc.figure:7s} axis={sc.axis:16s} "
+                  f"traces={','.join(sc.traces)}{golden}")
+            print(f"{'':24s} {sc.description}")
+        return 0
+
+    names: List[str] = []
+    known_figures = {sc.figure for sc in list_scenarios()}
+    for f in args.figure:
+        if f not in known_figures:
+            ap.error(f"unknown figure {f!r}; known: {sorted(known_figures)}")
+        names.extend(sc.name for sc in list_scenarios(figure=f))
+    if "all" in args.scenario:
+        names.extend(sc.name for sc in list_scenarios())
+    else:
+        known = {sc.name for sc in list_scenarios()}
+        bad = [n for n in args.scenario if n not in known]
+        if bad:
+            ap.error(f"unknown scenario(s) {', '.join(bad)}; "
+                     f"see --list for the registry")
+        names.extend(args.scenario)
+    if not names:
+        ap.error("nothing to run: pass --scenario/--figure (or --list)")
+    seen = list(dict.fromkeys(names))
+
+    for name in seen:
+        out = run_scenario_pipeline(
+            name, smoke=args.smoke, full=args.full, n_requests=args.n,
+            out_dir=Path(args.out), write_json=args.json,
+            write_csv=args.csv, write_plot=args.plot, engine=args.engine)
+        print(_summary_line(out, get_scenario(name).axis))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

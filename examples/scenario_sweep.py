@@ -1,0 +1,50 @@
+"""Run a named scenario and print its policy grid as a table.
+
+The scenario registry (``repro.cachesim.scenarios``) names the paper's
+figure setups plus heterogeneous beyond-paper regimes; this example runs
+one of them at a small scale and tabulates mean service cost per
+(trace, cell, policy) — the quickest way to eyeball a new regime before
+promoting it to the figure pipeline (``benchmarks/paper_figs.py``).
+
+    PYTHONPATH=src python examples/scenario_sweep.py [scenario] [n_requests]
+
+Defaults: ``hetero_tiers`` (cheap-small vs expensive-large cache tiers)
+at 20k requests.
+"""
+import sys
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO))          # benchmarks.* (figure pipeline)
+sys.path.insert(0, str(_REPO / "src"))  # repro.*
+
+from repro.cachesim import get_scenario, run_scenario  # noqa: E402
+from benchmarks.paper_figs import pivot_cells, normalised  # noqa: E402
+
+
+def main() -> None:
+    name = sys.argv[1] if len(sys.argv) > 1 else "hetero_tiers"
+    n_req = int(sys.argv[2]) if len(sys.argv) > 2 else 20_000
+    sc = get_scenario(name)
+    print(f"scenario {sc.name} ({sc.figure}): {sc.description}\n"
+          f"axis={sc.axis}  traces={','.join(sc.traces)}  "
+          f"n_requests={n_req}\n")
+    records = run_scenario(sc, n_requests=n_req)
+    cells = pivot_cells(records, sc.axis)
+    policies = [p for p in sc.policies]
+    head = f"{'trace':>8s} {sc.axis:>18s}" + "".join(
+        f" {p:>9s}" for p in policies) + "   (cost / PI-normalised)"
+    print(head)
+    print("-" * len(head))
+    for cell in cells:
+        norm = normalised(cell)
+        row = f"{cell['trace']:>8s} {str(cell[sc.axis]):>18s}"
+        for p in policies:
+            row += f" {cell['cost'][p]:9.3f}"
+        row += "   " + " ".join(f"{p}={norm[p]:.2f}" for p in policies
+                                if p != "pi")
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

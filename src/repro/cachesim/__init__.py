@@ -8,14 +8,27 @@ feeding per-policy replays: decision-table lookups for the model-based
 policies (``repro.cachesim.fastpath``) and a speculative segmented replay
 for the calibrated policy (``repro.cachesim.fna_cal_fast``).
 ``run_policies`` and ``repro.cachesim.sweep`` exploit the sharing for
-policy x trace x interval grids.  See the ``repro.cachesim.simulator``
-module docstring for the invariant statement.
+policy x trace x axis grids, and ``repro.cachesim.scenarios`` names the
+experiment configurations (paper Figs. 1, 3-7 plus heterogeneous
+beyond-paper regimes) that drive ``benchmarks/paper_figs.py`` and the
+golden differential suite.  See the ``repro.cachesim.simulator`` module
+docstring for the invariant statement.
 """
 from repro.cachesim.lru import LRUCache
+from repro.cachesim.scenarios import (
+    GOLDEN_SCENARIOS,
+    SCENARIOS,
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    run_scenario,
+)
 from repro.cachesim.simulator import SimConfig, SimResult, Simulator, run_policies
-from repro.cachesim.sweep import run_sweep, sweep_records
+from repro.cachesim.sweep import run_grid, run_sweep, sweep_records
 from repro.cachesim.systemstate import SystemTrace
 from repro.cachesim.traces import get_trace, TRACES
 
 __all__ = ["LRUCache", "SimConfig", "SimResult", "Simulator", "SystemTrace",
-           "run_policies", "run_sweep", "sweep_records", "get_trace", "TRACES"]
+           "Scenario", "SCENARIOS", "GOLDEN_SCENARIOS", "get_scenario",
+           "list_scenarios", "run_scenario", "run_policies", "run_grid",
+           "run_sweep", "sweep_records", "get_trace", "TRACES"]

@@ -58,7 +58,8 @@ import numpy as np
 from repro.cachesim.simulator import SimResult, Simulator
 from repro.cachesim.systemstate import SystemTrace
 from repro.core import hocs_fna
-from repro.core.policies import ds_pgm
+from repro.core.batched import MAX_EXHAUSTIVE_TABLE_CACHES as _MAX_EXH_TABLE_CACHES
+from repro.core.policies import ds_pgm, exhaustive
 
 # 2^n tables per version: past this the reference loop is the better deal
 _MAX_TABLE_CACHES = 12
@@ -110,7 +111,12 @@ def _selection_masks(sim: Simulator, pi_v: np.ndarray, nu_v: np.ndarray,
         mask = selection_tables(costs, pi_mat, nu_mat, miss_penalty,
                                 fno=(cfg.policy == "fno"))
         return (mask.reshape(-1, n)[:v_count * k] @ pow2).astype(np.int64)
-    # generic subroutine (e.g. exhaustive): scalar call per (version, pattern)
+    if sim.alg is exhaustive and n <= _MAX_EXH_TABLE_CACHES:
+        # batched 2^n-subset enumeration over every (version, pattern) row
+        from repro.core.batched import exhaustive_tables
+        return exhaustive_tables(costs, pi_v, nu_v, miss_penalty,
+                                 fno=(cfg.policy == "fno")).reshape(-1)
+    # generic subroutine: scalar call per (version, pattern)
     sel = np.empty(v_count * k, dtype=np.int64)
     for v in range(v_count):
         pi, nu = pi_v[v], nu_v[v]
@@ -165,6 +171,11 @@ def run_fast(sim: Simulator, trace: np.ndarray, res: SimResult,
     cfg = sim.cfg
     n = cfg.n_caches
     if n > _MAX_TABLE_CACHES:
+        return sim._run_reference(trace, res)
+    if cfg.policy == "fna_cal" and sim.alg is exhaustive and \
+            n > _MAX_EXH_TABLE_CACHES:
+        # the segmented replay's verification pass needs the batched
+        # subset enumeration; past its budget the reference loop wins
         return sim._run_reference(trace, res)
     costs = list(cfg.costs)
     M = cfg.miss_penalty

@@ -45,9 +45,11 @@ The engine speculates and commits:
 
 Bit-exactness: bridge-committed requests replicate the reference
 operations literally; speculatively-committed requests are verified
-equal to the float64 batched DS_PGM of the true rho — the same near-tie
-parity caveat as ``repro.cachesim.fastpath``, ruled out empirically by
-``tests/test_fna_cal_fast.py`` across traces and calibration settings.
+equal to the float64 batched evaluation of the true rho (DS_PGM prefix
+scan, or the 2^n-subset enumeration when ``alg="exhaustive"``, n <= 8) —
+the same near-tie parity caveat as ``repro.cachesim.fastpath``, ruled
+out empirically by ``tests/test_fna_cal_fast.py`` across traces and
+calibration settings.
 """
 from __future__ import annotations
 
@@ -56,9 +58,9 @@ from typing import List, Tuple
 import numpy as np
 
 from repro.cachesim.systemstate import SystemTrace
-from repro.core.batched import rho_selection_tables
+from repro.core.batched import rho_exhaustive_tables, rho_selection_tables
 from repro.core.estimator import ewma_path
-from repro.core.policies import ds_pgm_mask
+from repro.core.policies import ds_pgm_mask, exhaustive_mask
 
 _START_WINDOW = 512
 _SPEC_MIN_WINDOW = 128       # smallest window worth a speculation round
@@ -83,9 +85,16 @@ def replay_fna_cal(sim, st: SystemTrace, res):
     M = float(cfg.miss_penalty)
     g = float(cfg.cal_gamma)
     min_obs = int(cfg.cal_min_obs)
-    # this engine only runs with the ds_pgm subroutine (the Simulator
-    # dispatch falls back to the reference loop otherwise), so the scalar
-    # inner calls can use the overhead-stripped bitmask variant
+    # the speculate-and-commit loop is subroutine-agnostic: it needs a
+    # scalar bitmask call (bridge/table rows) and a batched float64
+    # verifier over an arbitrary rho matrix.  ds_pgm pairs the stripped
+    # scalar variant with the prefix-scan verifier; exhaustive (n <= 8 —
+    # the Simulator dispatch falls back to the reference loop beyond) pairs
+    # it with the batched 2^n-subset enumeration.
+    if cfg.alg == "exhaustive":
+        mask_fn, verify_fn = exhaustive_mask, rho_exhaustive_tables
+    else:
+        mask_fn, verify_fn = ds_pgm_mask, rho_selection_tables
     arange_n = np.arange(n)
     pow2 = (np.int64(1) << arange_n).astype(np.int64)
     bits_of = ((np.arange(k)[:, None] >> arange_n) & 1).astype(bool)  # [2^n, n]
@@ -146,7 +155,7 @@ def replay_fna_cal(sim, st: SystemTrace, res):
                 if (pat >> j) & 1
                 else (ne[j] if (no[j] >= min_obs or uv[j]) else mn[j])
                 for j in rng_n]
-            base = ds_pgm_mask(costs, rhos, M)
+            base = mask_fn(costs, rhos, M)
             m = base | eps_c[i]
             selm[s + i] = m
             ai = abs_c[i]
@@ -183,7 +192,7 @@ def replay_fna_cal(sim, st: SystemTrace, res):
             for p in range(k):
                 rhos = [rp_l[j] if (p >> j) & 1 else rn_l[j]
                         for j in range(n)]
-                tab[p] = ds_pgm_mask(costs, rhos, M)
+                tab[p] = mask_fn(costs, rhos, M)
             tables[v] = tab
         return tables
 
@@ -270,7 +279,7 @@ def replay_fna_cal(sim, st: SystemTrace, res):
                 rho = np.where(ind_seg,
                                np.where(up_t, pi_t[:cl], st.pi_v[vc]),
                                np.where(un_t, nu_t[:cl], st.nu_v[vc]))
-            true_selm = rho_selection_tables(costs, rho, M) @ pow2
+            true_selm = verify_fn(costs, rho, M) @ pow2
             bad = np.flatnonzero(true_selm != spec[commit:c1])
             ok = cl if bad.size == 0 else int(bad[0])
             clean = bad.size == 0

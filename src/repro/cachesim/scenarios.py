@@ -1,0 +1,375 @@
+"""Declarative scenario registry: named experiment configurations.
+
+The paper's evaluation (Figs. 1, 3-7) is a family of policy grids — each
+figure fixes a system configuration, sweeps one axis (update interval,
+indicator budget, cache size, cache count, miss penalty) over a set of
+workloads, and compares every policy per cell.  A :class:`Scenario`
+captures exactly that, declaratively:
+
+  * ``traces``       — workload names (``repro.cachesim.traces``), plus
+                       optional per-trace generator knobs (catalog size,
+                       skew, churn) via ``trace_kwargs``;
+  * ``base``         — the common ``SimConfig`` fields (costs, sizes, bpe,
+                       intervals, miss penalty, subroutine).  Per-cache
+                       fields accept sequences (heterogeneous tiers);
+  * ``axis/values``  — the swept field and its grid.  A value is a
+                       scalar, a per-cache tuple, or a mapping of coupled
+                       overrides (see ``repro.cachesim.sweep``);
+  * ``policies``     — the policy panel of the figure;
+  * golden fields    — the small, fixed sub-grid pinned by the golden
+                       differential suite (``tests/golden/``; regenerate
+                       with ``python tools/regen_golden.py`` — see
+                       ``docs/scenarios.md``).
+
+The registry covers the paper's Fig. 4-7 setups (homogeneous caches, one
+cost vector) AND heterogeneous regimes the journal version (arXiv:
+2203.09119) and the bandwidth-constrained follow-up (arXiv:2104.01386)
+emphasise: cheap-small/expensive-large cache tiers, per-cache staggered
+advertisement cadences, and delayed-view clients whose view of one cache
+is persistently stale.
+
+:func:`run_scenario` executes any scenario end-to-end through the
+shared-SystemTrace grid runner and returns flat records;
+``benchmarks/paper_figs.py`` turns those into per-figure JSON/CSV
+artifacts and cost curves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.cachesim.simulator import SimConfig
+from repro.cachesim.sweep import (
+    cell_label,
+    cell_overrides,
+    hashable_label,
+    run_grid,
+    sweep_records,
+)
+from repro.cachesim.traces import get_trace
+
+#: the full policy panel of the heterogeneous figures
+PANEL = ("fna", "fna_cal", "fno", "pi")
+#: the homogeneous panel (Algorithm 1 requires identical costs)
+PANEL_HOM = ("fna", "fna_cal", "fno", "hocs", "pi")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One named experiment configuration (see module docstring)."""
+    name: str
+    figure: str                      # paper figure, or "beyond" (new regime)
+    description: str
+    traces: Tuple[str, ...]
+    axis: str                        # swept SimConfig field (the x-axis)
+    values: tuple                    # scalars, per-cache tuples, or mappings
+    base: Mapping = field(default_factory=dict)   # common SimConfig kwargs
+    policies: Tuple[str, ...] = PANEL
+    n_requests: int = 60_000         # reduced scale (CI / laptop)
+    n_requests_full: int = 1_000_000 # paper scale
+    seed: int = 1
+    trace_kwargs: Mapping = field(default_factory=dict)  # per-trace knobs
+    # --- golden differential sub-grid (reference-engine pinned).  Kept
+    # small (a few thousand requests) but NON-degenerate: golden cells
+    # must fire advertisements and estimate updates within the short run,
+    # so their values/overrides may differ from the display grid ---------
+    golden_values: Optional[tuple] = None   # default: first two axis values
+    golden_traces: Optional[tuple] = None   # default: first trace
+    golden_base: Mapping = field(default_factory=dict)   # extra overrides
+    golden_n_requests: int = 5_000
+
+    def config(self, **overrides) -> SimConfig:
+        """The cell-independent base SimConfig (+ ad-hoc overrides)."""
+        kw = dict(self.base)
+        kw.update(overrides)
+        kw.setdefault("seed", self.seed)
+        return SimConfig(**kw)
+
+    def make_traces(self, n_requests: int,
+                    names: Optional[Sequence[str]] = None) -> Dict:
+        names = tuple(names if names is not None else self.traces)
+        return {t: get_trace(t, n_requests, seed=self.seed,
+                             **self.trace_kwargs.get(t, {}))
+                for t in names}
+
+    # -- golden sub-grid ---------------------------------------------------
+
+    def golden_grid(self) -> Tuple[Dict, tuple]:
+        """(traces, values) of the pinned golden sub-grid."""
+        values = self.golden_values if self.golden_values is not None \
+            else self.values[:2]
+        traces = self.make_traces(self.golden_n_requests,
+                                  names=self.golden_traces or self.traces[:1])
+        return traces, values
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def _scenario(**kw) -> Scenario:
+    sc = Scenario(**kw)
+    if sc.name in SCENARIOS:
+        raise ValueError(f"duplicate scenario {sc.name!r}")
+    SCENARIOS[sc.name] = sc
+    return sc
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; known: "
+                       f"{sorted(SCENARIOS)}") from None
+
+
+def list_scenarios(figure: Optional[str] = None) -> List[Scenario]:
+    out = [sc for sc in SCENARIOS.values()
+           if figure is None or sc.figure == figure]
+    return sorted(out, key=lambda sc: sc.name)
+
+
+def run_scenario(sc: Scenario, n_requests: Optional[int] = None,
+                 engine: str = "fast", share_system: bool = True,
+                 policies: Optional[Sequence[str]] = None,
+                 golden: bool = False) -> List[dict]:
+    """Execute a scenario through the shared-SystemTrace grid runner and
+    return one flat record per (trace, cell, policy) — the pipeline input
+    of ``benchmarks/paper_figs.py``.
+
+    ``golden=True`` runs the pinned golden sub-grid (golden traces,
+    values, base overrides and request count) instead of the display
+    grid — the sub-grid is chosen to stay NON-degenerate at its short
+    length, so it is also the right shape for smoke runs."""
+    if golden:
+        n_req = n_requests if n_requests is not None else sc.golden_n_requests
+        traces, values = sc.golden_grid()
+        if n_req != sc.golden_n_requests:
+            traces = sc.make_traces(n_req, names=tuple(traces))
+        base = sc.config(engine=engine, **sc.golden_base)
+    else:
+        n_req = n_requests if n_requests is not None else sc.n_requests
+        traces, values = sc.make_traces(n_req), sc.values
+        base = sc.config(engine=engine)
+    grid = run_grid(traces, base, sc.axis, values,
+                    policies=tuple(policies or sc.policies),
+                    share_system=share_system)
+    records = sweep_records(grid, axis=sc.axis)
+    # mapping cells carry coupled overrides beyond the axis label (Fig. 6
+    # moves update_interval with cache_size): put them on the records so
+    # artifacts stay self-describing
+    extra = {cell_label(sc.axis, v): cell_overrides(sc.axis, v)
+             for v in values if isinstance(v, Mapping)}
+    for rec in records:
+        rec["scenario"] = sc.name
+        for k, v in extra.get(hashable_label(rec[sc.axis]), {}).items():
+            rec.setdefault(k, v)
+    return records
+
+
+# ===========================================================================
+# Paper figures (reduced-scale grids; --full rescales in paper_figs)
+# ===========================================================================
+
+_scenario(
+    name="fig1_staleness",
+    figure="fig1",
+    description="FN/FP ratio of the advertised indicator vs update "
+                "interval (paper Fig. 1: staleness manufactures false "
+                "negatives; >10% beyond 1K insertions).",
+    traces=("wiki", "gradle"),
+    axis="update_interval",
+    values=(16, 64, 256, 1024, 2048),
+    base=dict(cache_size=2_000, bpe=14.0),
+    policies=("fno",),
+)
+
+_scenario(
+    name="fig1_staleness_tight",
+    figure="fig1",
+    description="Fig. 1 with a tight 4-bits-per-entry indicator: the FP "
+                "floor rises, the staleness-driven FN growth stays.",
+    traces=("wiki", "gradle"),
+    axis="update_interval",
+    values=(16, 64, 256, 1024, 2048),
+    base=dict(cache_size=2_000, bpe=4.0),
+    policies=("fno",),
+)
+
+_scenario(
+    name="fig3_penalty",
+    figure="fig3",
+    description="Normalised cost vs miss penalty across all four "
+                "workloads (paper Fig. 3).",
+    traces=("wiki", "gradle", "scarab", "f2"),
+    axis="miss_penalty",
+    values=(50.0, 100.0, 500.0),
+    base=dict(cache_size=2_000, update_interval=200),
+    golden_traces=("gradle", "f2"),
+    golden_values=(50.0, 500.0),
+)
+
+_scenario(
+    name="fig4_gradle",
+    figure="fig4",
+    description="Normalised cost vs update interval on the recency-biased "
+                "gradle workload (paper Fig. 4's headline regime: "
+                "staleness hurts FNO most where the working set moves).",
+    traces=("gradle",),
+    axis="update_interval",
+    values=(16, 128, 512, 2048, 8192),
+    base=dict(cache_size=2_000),
+    golden_values=(64, 512),
+)
+
+_scenario(
+    name="fig4_wiki",
+    figure="fig4",
+    description="Normalised cost vs update interval on the "
+                "frequency-biased wiki workload (paper Fig. 4).",
+    traces=("wiki",),
+    axis="update_interval",
+    values=(16, 128, 512, 2048, 8192),
+    base=dict(cache_size=2_000),
+    golden_values=(64, 512),
+)
+
+_scenario(
+    name="fig5_indicator_size",
+    figure="fig5",
+    description="Normalised cost vs indicator budget (bits per entry) at "
+                "the STALE advertisement cadence (paper Fig. 5, incl. the "
+                "FNO anomaly: a LARGER indicator can hurt FNO; "
+                "``fig5_indicator_size_fresh`` covers the short cadence).",
+    traces=("wiki", "gradle"),
+    axis="bpe",
+    values=(2.0, 4.0, 8.0, 14.0, 22.0),
+    base=dict(cache_size=2_000, update_interval=800),
+    golden_values=(4.0, 14.0),
+)
+
+_scenario(
+    name="fig5_indicator_size_fresh",
+    figure="fig5",
+    description="Fig. 5's second cadence: the same bits-per-entry sweep "
+                "with 4x more frequent advertisements, so the FP budget "
+                "rather than staleness dominates.",
+    traces=("wiki", "gradle"),
+    axis="bpe",
+    values=(2.0, 4.0, 8.0, 14.0, 22.0),
+    base=dict(cache_size=2_000, update_interval=200),
+    golden_values=(4.0, 14.0),
+)
+
+_scenario(
+    name="fig6_cache_size",
+    figure="fig6",
+    description="Actual mean cost vs cache size, update interval scaled "
+                "with capacity (paper Fig. 6: FNA at a fraction of the "
+                "capacity beats FNO at full size).",
+    traces=("wiki",),
+    axis="cache_size",
+    values=tuple({"cache_size": s, "update_interval": max(s // 8, 16)}
+                 for s in (500, 1_000, 2_000, 4_000)),
+    base=dict(),
+    seed=2,
+    n_requests=80_000,
+    n_requests_full=300_000,
+    golden_values=tuple({"cache_size": s, "update_interval": max(s // 8, 16)}
+                        for s in (500, 2_000)),
+)
+
+_scenario(
+    name="fig7_num_caches",
+    figure="fig7",
+    description="Normalised cost vs number of (homogeneous, cost-2) "
+                "caches (paper Fig. 7); includes Algorithm 1 (HOCS).",
+    traces=("gradle",),
+    axis="n_caches",
+    values=tuple({"n_caches": n, "costs": (2.0,) * n} for n in (2, 3, 5, 7)),
+    base=dict(cache_size=2_000, update_interval=800),
+    policies=PANEL_HOM,
+    golden_values=tuple({"n_caches": n, "costs": (2.0,) * n} for n in (2, 5)),
+    golden_base=dict(update_interval=150),
+)
+
+# ===========================================================================
+# Beyond-paper heterogeneous regimes (journal / follow-up emphasis)
+# ===========================================================================
+
+_scenario(
+    name="hetero_tiers",
+    figure="beyond",
+    description="Cheap-small / expensive-large cache tiers: cost and "
+                "capacity anti-correlated (1x/500 vs 4x/4000), so the "
+                "selection trade-off is genuinely heterogeneous.",
+    traces=("gradle", "scarab"),
+    axis="update_interval",
+    values=(64, 512, 2048),
+    base=dict(costs=(1.0, 2.0, 4.0), cache_size=(500, 1_500, 4_000)),
+    golden_values=(64, 512),
+)
+
+_scenario(
+    name="staggered_adverts",
+    figure="beyond",
+    description="Per-cache advertisement cadences (the bandwidth-"
+                "constrained regime of arXiv:2104.01386): the same total "
+                "advertisement budget concentrated on different caches.",
+    traces=("gradle",),
+    axis="update_interval",
+    values=((600, 600, 600), (100, 400, 1_600),
+            (1_600, 400, 100), (50, 250, 5_000)),
+    base=dict(cache_size=2_000),
+    golden_values=((150, 150, 150), (50, 150, 600)),
+)
+
+_scenario(
+    name="delayed_view",
+    figure="beyond",
+    description="A delayed-view client: one cache's advertisements are "
+                "an order of magnitude rarer, so its client view is "
+                "persistently stale while the others stay fresh.",
+    traces=("wiki",),
+    axis="update_interval",
+    values=((200, 200, 200), (200, 200, 2_000), (200, 200, 20_000)),
+    base=dict(cache_size=2_000, est_interval=25),
+    golden_values=((200, 200, 200), (200, 200, 2_000)),
+)
+
+_scenario(
+    name="exhaustive_small",
+    figure="beyond",
+    description="The exact Eq. (10) subroutine (exhaustive 2^n "
+                "enumeration) on a 4-cache heterogeneous system — "
+                "pins the batched exhaustive fast path end to end.",
+    traces=("gradle",),
+    axis="update_interval",
+    values=(100, 800),
+    base=dict(n_caches=4, costs=(1.0, 2.0, 3.0, 1.5),
+              cache_size=1_500, alg="exhaustive"),
+    n_requests=30_000,
+    golden_values=(100, 800),
+)
+
+_scenario(
+    name="heavy_skew",
+    figure="beyond",
+    description="Wiki-like workload at a much heavier skew and smaller "
+                "catalog (alpha 1.2, 100K items): hits concentrate, "
+                "false positives dominate the indicator error budget.",
+    traces=("wiki",),
+    axis="update_interval",
+    values=(64, 512, 2_048),
+    base=dict(cache_size=2_000),
+    trace_kwargs={"wiki": dict(alpha=1.2, catalog=100_000)},
+    golden_values=(64, 512),
+)
+
+#: scenarios pinned by the golden differential suite — every policy of
+#: each (including fna_cal everywhere and the exhaustive subroutine via
+#: ``exhaustive_small``) is asserted bit-exact fast-vs-reference
+GOLDEN_SCENARIOS = (
+    "fig3_penalty", "fig4_gradle", "fig4_wiki", "fig7_num_caches",
+    "hetero_tiers", "staggered_adverts", "delayed_view",
+    "exhaustive_small", "heavy_skew",
+)

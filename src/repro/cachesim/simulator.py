@@ -63,15 +63,17 @@ frozen decision tables, exact batched EWMA trajectories, and a batched
 float64 verification pass per segment (``repro.cachesim.fna_cal_fast``).
 Everything else (LRU dynamics, CBF bookkeeping cadence, Eq. 7-9 updates,
 cost accounting order) is replicated operation-for-operation, so the two
-engines produce identical ``SimResult``s for every policy.  The only
-remaining reference-engine fallbacks: n_caches beyond the table budget,
-and ``fna_cal`` with the ``exhaustive`` subroutine (its verification pass
-is DS_PGM-specific).
+engines produce identical ``SimResult``s for every policy.  Both
+subroutines run fast: DS_PGM through the batched prefix scan, exhaustive
+through a batched 2^n-subset enumeration (n <= 8, bit-exact DP over
+subset masks).  The only remaining reference-engine fallbacks are cache
+counts beyond the table budgets (n > 12 for DS_PGM tables, n > 8 for the
+exhaustive enumeration under ``fna_cal``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -93,12 +95,20 @@ from repro.cachesim.lru import LRUCache
 @dataclass
 class SimConfig:
     n_caches: int = 3
-    cache_size: int = 10_000
+    # cache_size / bpe / update_interval / est_interval accept either one
+    # scalar (every cache identical — the paper's Figs. 4-7 setups) or a
+    # per-cache sequence of length n_caches (heterogeneous tiers, staggered
+    # advertisement cadences, delayed-view caches; scenario regimes beyond
+    # the paper).  ``cache_sizes``/``bpes``/``update_intervals``/
+    # ``est_intervals`` expose the normalised per-cache tuples.
+    cache_size: Union[int, Sequence[int]] = 10_000
     costs: Sequence[float] = (1.0, 2.0, 3.0)
     miss_penalty: float = 100.0
-    bpe: float = 14.0
-    update_interval: int = 1_000      # insertions between advertisements
-    est_interval: int = 50            # insertions between FP/FN re-estimation
+    bpe: Union[float, Sequence[float]] = 14.0
+    update_interval: Union[int, Sequence[int]] = 1_000
+    # ^ insertions between advertisements
+    est_interval: Union[int, Sequence[int]] = 50
+    # ^ insertions between FP/FN re-estimation
     q_horizon: int = 100              # Eq. (9) epoch T
     q_delta: float = 0.25             # Eq. (9) smoothing
     policy: str = "fna"               # fna | fna_cal | fno | pi | hocs
@@ -123,6 +133,35 @@ class SimConfig:
             self.costs = tuple(
                 1.0 + (i % 3) for i in range(self.n_caches)) if self.n_caches != 3 \
                 else (1.0, 2.0, 3.0)
+        # validate per-cache sequence lengths eagerly
+        for f in ("cache_sizes", "bpes", "update_intervals", "est_intervals"):
+            getattr(self, f)
+
+    def _per_cache(self, value, cast) -> tuple:
+        if isinstance(value, (list, tuple, np.ndarray)):
+            vals = tuple(cast(v) for v in value)
+            if len(vals) != self.n_caches:
+                raise ValueError(
+                    f"per-cache sequence {value!r} has length {len(vals)}, "
+                    f"expected n_caches={self.n_caches}")
+            return vals
+        return (cast(value),) * self.n_caches
+
+    @property
+    def cache_sizes(self) -> tuple:
+        return self._per_cache(self.cache_size, int)
+
+    @property
+    def bpes(self) -> tuple:
+        return self._per_cache(self.bpe, float)
+
+    @property
+    def update_intervals(self) -> tuple:
+        return self._per_cache(self.update_interval, int)
+
+    @property
+    def est_intervals(self) -> tuple:
+        return self._per_cache(self.est_interval, int)
 
 
 @dataclass
@@ -228,10 +267,11 @@ class _CacheNode:
 class Simulator:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
+        sizes, bpes = cfg.cache_sizes, cfg.bpes
+        upd, est = cfg.update_intervals, cfg.est_intervals
         self.nodes = [
-            _CacheNode(cfg.cache_size, cfg.bpe, seed=cfg.seed * 1000 + j,
-                       update_interval=cfg.update_interval,
-                       est_interval=cfg.est_interval)
+            _CacheNode(sizes[j], bpes[j], seed=cfg.seed * 1000 + j,
+                       update_interval=upd[j], est_interval=est[j])
             for j in range(cfg.n_caches)
         ]
         self.q_est = [QEstimator(cfg.q_horizon, cfg.q_delta)
@@ -273,8 +313,10 @@ class Simulator:
         self._view_ver = [None] * cfg.n_caches
         if cfg.engine not in ("fast", "reference"):
             raise ValueError(f"unknown engine {cfg.engine!r}")
-        if cfg.engine == "fast" and \
-                (cfg.policy != "fna_cal" or cfg.alg == "ds_pgm"):
+        if cfg.engine == "fast":
+            # run_fast owns the table-budget fallbacks (n beyond the
+            # DS_PGM table or exhaustive-enumeration limits drops to the
+            # reference loop transparently)
             from repro.cachesim.fastpath import run_fast
             return run_fast(self, trace, res, system=system)
         return self._run_reference(trace, res)

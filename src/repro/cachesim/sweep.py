@@ -1,18 +1,36 @@
-"""Policy x trace x update-interval sweep runner (paper Figs. 4-6 grids).
+"""Policy x trace x system-axis sweep runner (paper Figs. 4-7 grids).
 
 The paper's headline claim — FNA matching FNO's cost with an order of
 magnitude fewer advertised bits — is established on multi-dimensional
-sweeps: every policy, over every workload, across a range of
-advertisement intervals.  The system evolution is policy-independent
-(hash placement), so each (trace, update_interval) grid cell computes its
+sweeps: every policy, over every workload, across a range of system
+parameters (advertisement intervals, indicator budgets, cache sizes,
+cache counts).  The system evolution is policy-independent (hash
+placement), so each (trace, cell) computes its
 :class:`~repro.cachesim.systemstate.SystemTrace` exactly once and replays
 every policy against it (via :func:`repro.cachesim.simulator.
 run_policies`): a P-policy grid costs one system sweep per cell plus
 P cheap replays, instead of P full simulations.
 
-``update_interval`` is part of the SYSTEM configuration (it changes the
-advertisement cadence and hence the indicators themselves), so cells
-never share sweeps with each other — only policies within a cell do.
+:func:`run_grid` sweeps an arbitrary ``SimConfig`` field.  A cell value
+is one of:
+
+  * a scalar — assigned to the swept field (``update_interval=512``);
+  * a per-cache sequence — assigned as-is (staggered advertisement
+    cadences: ``update_interval=(100, 400, 1600)``);
+  * a mapping of several SimConfig overrides — for axes whose cells move
+    coupled fields (paper Fig. 6 scales ``update_interval`` with
+    ``cache_size``; Fig. 7 resizes the homogeneous cost vector with
+    ``n_caches``).
+
+Swept fields are SYSTEM configuration whenever they change the
+indicators or cache dynamics (``update_interval``, ``bpe``,
+``cache_size``, ``n_caches``, ...), so cells never share sweeps with
+each other — only policies within a cell do.  Decision-side axes
+(``miss_penalty``, ``costs``) would in principle allow cross-cell
+sharing too; ``run_grid`` does not exploit that today.
+
+:func:`run_sweep` is the ``update_interval`` special case (Figs. 4-6),
+kept as the stable entry point for benchmarks and tests.
 """
 from __future__ import annotations
 
@@ -26,40 +44,98 @@ from repro.cachesim.traces import get_trace
 
 DEFAULT_POLICIES = ("fna", "fna_cal", "fno", "pi")
 
+#: one grid-cell key: (trace name, axis label)
+CellKey = Tuple[str, object]
+
+
+def hashable_label(value):
+    """Normalise an axis value into a hashable cell-key / record-label
+    component (lists/arrays -> tuples, numpy scalars -> Python scalars).
+    Public: the figure pipeline and the golden suite key on it too."""
+    if isinstance(value, np.ndarray):
+        value = value.tolist()
+    if isinstance(value, (list, tuple)):
+        return tuple(hashable_label(v) for v in value)
+    if isinstance(value, np.generic):
+        return value.item()
+    return value
+
+
+def cell_overrides(axis: str, value) -> dict:
+    """The SimConfig field overrides one axis value denotes."""
+    if isinstance(value, Mapping):
+        return {k: hashable_label(v) for k, v in value.items()}
+    return {axis: hashable_label(value)}
+
+
+def cell_label(axis: str, value):
+    """The hashable grid key / record label of one axis value (for a
+    mapping cell: its swept-field entry, else the full override tuple)."""
+    if isinstance(value, Mapping):
+        if axis in value:
+            return hashable_label(value[axis])
+        return tuple(sorted((k, hashable_label(v)) for k, v in value.items()))
+    return hashable_label(value)
+
+
+def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
+             base: SimConfig,
+             axis: str,
+             values: Sequence,
+             policies: Sequence[str] = DEFAULT_POLICIES,
+             n_requests: int = 100_000,
+             share_system: bool = True,
+             ) -> Dict[CellKey, Dict[str, SimResult]]:
+    """Run a policy grid over an arbitrary system axis; returns
+    ``{(trace_name, label): {policy: SimResult}}``.
+
+    ``traces`` is either a mapping of name -> request array, or a
+    sequence of :func:`~repro.cachesim.traces.get_trace` names generated
+    at ``n_requests`` with ``base.seed``.  ``share_system=False`` forces
+    per-policy full runs (benchmarking the amortisation itself).
+    """
+    if not isinstance(traces, Mapping):
+        traces = {name: get_trace(name, n_requests, seed=base.seed)
+                  for name in traces}
+    out: Dict[CellKey, Dict[str, SimResult]] = {}
+    for name, trace in traces.items():
+        for value in values:
+            key = (name, cell_label(axis, value))
+            if key in out:
+                raise ValueError(
+                    f"duplicate grid cell {key!r}: two axis values share "
+                    f"the label {key[1]!r} — give mapping cells distinct "
+                    f"{axis!r} entries (or sweep a different axis)")
+            cfg = dataclasses.replace(base, **cell_overrides(axis, value))
+            out[key] = run_policies(
+                trace, cfg, policies=policies, share_system=share_system)
+    return out
+
 
 def run_sweep(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
               base: SimConfig,
               update_intervals: Sequence[int],
               policies: Sequence[str] = DEFAULT_POLICIES,
               n_requests: int = 100_000,
-              ) -> Dict[Tuple[str, int], Dict[str, SimResult]]:
-    """Run the full grid; returns ``{(trace_name, interval): {policy:
-    SimResult}}``.
-
-    ``traces`` is either a mapping of name -> request array, or a
-    sequence of :func:`~repro.cachesim.traces.get_trace` names generated
-    at ``n_requests`` with ``base.seed``.
-    """
-    if not isinstance(traces, Mapping):
-        traces = {name: get_trace(name, n_requests, seed=base.seed)
-                  for name in traces}
-    out: Dict[Tuple[str, int], Dict[str, SimResult]] = {}
-    for name, trace in traces.items():
-        for interval in update_intervals:
-            cfg = dataclasses.replace(base, update_interval=int(interval))
-            out[(name, int(interval))] = run_policies(
-                trace, cfg, policies=policies)
-    return out
+              share_system: bool = True,
+              ) -> Dict[CellKey, Dict[str, SimResult]]:
+    """The ``update_interval`` grid (paper Figs. 4-6 x-axis); see
+    :func:`run_grid`."""
+    values = [int(i) for i in update_intervals]
+    return run_grid(traces, base, "update_interval", values,
+                    policies=policies, n_requests=n_requests,
+                    share_system=share_system)
 
 
-def sweep_records(grid: Dict[Tuple[str, int], Dict[str, SimResult]]
-                  ) -> List[dict]:
-    """Flatten a :func:`run_sweep` grid into one record per (trace,
-    interval, policy) — ready for CSV/JSON dumps or plotting."""
+def sweep_records(grid: Dict[CellKey, Dict[str, SimResult]],
+                  axis: str = "update_interval") -> List[dict]:
+    """Flatten a :func:`run_grid`/:func:`run_sweep` grid into one record
+    per (trace, cell, policy) — ready for CSV/JSON dumps or plotting.
+    Per-cache tuple labels serialise as lists in JSON."""
     records = []
-    for (name, interval), cell in grid.items():
+    for (name, label), cell in grid.items():
         for policy, res in cell.items():
-            rec = {"trace": name, "update_interval": interval}
+            rec = {"trace": name, axis: label}
             rec.update(res.to_dict())
             records.append(rec)
     return records

@@ -258,9 +258,12 @@ class SystemTrace:
     @staticmethod
     def system_key(cfg) -> tuple:
         """The SimConfig fields the system evolution depends on (policy,
-        costs, miss penalty and calibration knobs are decision-side only)."""
-        return (cfg.n_caches, cfg.cache_size, cfg.bpe, cfg.update_interval,
-                cfg.est_interval, cfg.q_horizon, cfg.q_delta, cfg.seed)
+        costs, miss penalty and calibration knobs are decision-side only).
+        Per-cache fields enter as their normalised tuples, so a scalar and
+        its broadcast sequence hash identically."""
+        return (cfg.n_caches, cfg.cache_sizes, cfg.bpes,
+                cfg.update_intervals, cfg.est_intervals,
+                cfg.q_horizon, cfg.q_delta, cfg.seed)
 
     @classmethod
     def compute(cls, sim, trace: np.ndarray) -> "SystemTrace":

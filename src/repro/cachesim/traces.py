@@ -132,13 +132,17 @@ def loop_scan_trace(n: int, block: int = 30_000, hot: int = 2_000,
     return np.where(pick, hot_ids, scan)
 
 
-def get_trace(name: str, n: int, seed: int = 0) -> np.ndarray:
+def get_trace(name: str, n: int, seed: int = 0, **kwargs) -> np.ndarray:
+    """Generate a named trace.  ``kwargs`` pass through to the generator
+    (catalog / skew / churn knobs — the scenario registry uses this for
+    heavier-than-paper regimes); the no-kwargs call stays bit-identical
+    per (name, n, seed)."""
     if name == "wiki":
-        return zipf_trace(n, seed=seed)
+        return zipf_trace(n, seed=seed, **kwargs)
     if name == "gradle":
-        return recency_trace(n, seed=seed)
+        return recency_trace(n, seed=seed, **kwargs)
     if name == "scarab":
-        return mixed_trace(n, seed=seed)
+        return mixed_trace(n, seed=seed, **kwargs)
     if name == "f2":
-        return loop_scan_trace(n, seed=seed)
+        return loop_scan_trace(n, seed=seed, **kwargs)
     raise KeyError(f"unknown trace {name!r}; known: {TRACES}")

@@ -14,6 +14,7 @@ from repro.core.policies import (
     cs_fno,
     ds_pgm,
     exhaustive,
+    exhaustive_mask,
     expected_cost,
     hocs_fna,
     perfect_information,
@@ -32,7 +33,7 @@ __all__ = [
     "CacheView", "exclusion_probabilities", "hit_ratio_from_q",
     "is_sufficiently_accurate", "phi_hat", "positive_indication_ratio",
     "service_cost", "cs_fna", "cs_fno", "ds_pgm", "exhaustive",
-    "expected_cost", "hocs_fna", "perfect_information", "rho_vector",
+    "exhaustive_mask", "expected_cost", "hocs_fna", "perfect_information", "rho_vector",
     "CountingBloomFilter", "StaleIndicatorPair", "hash_indices", "optimal_k",
     "theoretical_fp", "QEstimator", "WindowedRatio",
 ]

@@ -18,6 +18,11 @@ from jax.experimental import enable_x64
 
 EPS = 1e-12
 
+# the batched exhaustive table build enumerates 2^n subsets per pattern
+# row (4^n work per version): past this the scalar/reference loop wins.
+# Single source of truth for the fast engine's exhaustive dispatch.
+MAX_EXHAUSTIVE_TABLE_CACHES = 8
+
 
 def exclusions(h, fp, fn) -> Tuple[jax.Array, jax.Array]:
     """Eqs. (1)-(3), elementwise."""
@@ -136,6 +141,98 @@ def rho_selection_tables(costs, rhos, miss_penalty) -> np.ndarray:
     mask = np.empty((b, n), dtype=bool)
     mask.reshape(-1)[flat] = pick_sorted
     return mask
+
+
+def _subset_dp(costs, rhos, miss_penalty):
+    """[B, 2^n] Eq. (10) value of EVERY subset, bit-exact with the scalar
+    :func:`repro.core.exhaustive` enumeration.
+
+    The scalar loop accumulates a subset's cost and its exclusion product
+    by ascending cache index, so ``phi[b, m]`` must reproduce exactly that
+    IEEE operation order.  A DP that extends each mask by its HIGHEST set
+    bit does: ``m`` strips to ``m ^ (1 << hb)``, whose own value was built
+    in the same ascending order, and appends the one multiply/add the
+    scalar loop performs last.
+    """
+    rhos = np.asarray(rhos, np.float64)
+    b, n = rhos.shape
+    k = 1 << n
+    costs = np.asarray(costs, np.float64)
+    cost_m = np.zeros(k, np.float64)
+    prod_m = np.empty((b, k), np.float64)
+    prod_m[:, 0] = float(miss_penalty)
+    for m in range(1, k):
+        hb = m.bit_length() - 1
+        rest = m ^ (1 << hb)
+        cost_m[m] = cost_m[rest] + costs[hb]
+        np.multiply(prod_m[:, rest], rhos[:, hb], out=prod_m[:, m])
+    return cost_m[None, :] + prod_m
+
+
+def rho_exhaustive_tables(costs, rhos, miss_penalty, *, allowed=None
+                          ) -> np.ndarray:
+    """[B, n] bool masks: the exact Eq. (10) minimiser over all 2^n
+    subsets for an arbitrary per-request rho matrix (n <= 16).
+
+    The batched twin of the scalar :func:`repro.core.exhaustive` — the
+    exhaustive counterpart of :func:`rho_selection_tables`, and the
+    verification half of the calibrated fast engine when the exhaustive
+    subroutine is configured.  ``allowed`` (int64 [B], optional) restricts
+    row b to subsets of ``allowed[b]`` (the CS_FNO candidate set; the empty
+    set is always allowed).  Subset values reproduce the scalar loop's IEEE
+    operation order exactly (see ``_subset_dp``); the argmin takes the
+    LOWEST qualifying mask, matching the scalar ascending enumeration, with
+    the same ~1e-12 near-tie caveat documented on
+    :func:`rho_selection_tables`.
+    """
+    rhos = np.asarray(rhos, np.float64)
+    b, n = rhos.shape
+    if n > 16:
+        raise ValueError("rho_exhaustive_tables() limited to n <= 16")
+    k = 1 << n
+    phi = _subset_dp(costs, rhos, miss_penalty)
+    if allowed is not None:
+        bad = (np.arange(k)[None, :] & ~np.asarray(allowed, np.int64)[:, None]) != 0
+        phi[bad] = np.inf
+    # np.argmin returns the FIRST minimal subset in ascending-mask order;
+    # the scalar loop keeps the earlier mask unless a later one improves by
+    # more than EPS — identical away from ~1e-12 near-ties
+    best = np.argmin(phi, axis=1)
+    return ((best[:, None] >> np.arange(n)[None, :]) & 1).astype(bool)
+
+
+def exhaustive_tables(costs, pi, nu, miss_penalty, *, fno: bool = False,
+                      chunk: int = 1 << 13) -> np.ndarray:
+    """[V, 2^n] int64 selection bitmasks over ALL indication patterns for a
+    batch of V view versions, with the EXHAUSTIVE subroutine (n <= 8).
+
+    The exhaustive counterpart of :func:`selection_tables`: row (v, p)
+    holds the Eq. (10)-optimal subset under view version v for indication
+    pattern p; ``fno=True`` restricts candidates to positive-indication
+    caches.  Evaluated chunk-wise so the [rows, 2^n] subset matrix stays
+    bounded; the simulator fast engine feeds its whole version history
+    here when ``alg="exhaustive"``.
+    """
+    pi = np.atleast_2d(np.asarray(pi, np.float64))
+    nu = np.atleast_2d(np.asarray(nu, np.float64))
+    v, n = pi.shape
+    if n > MAX_EXHAUSTIVE_TABLE_CACHES:
+        raise ValueError(
+            f"exhaustive_tables() limited to n <= {MAX_EXHAUSTIVE_TABLE_CACHES}")
+    k = 1 << n
+    pat_bits = (np.arange(k)[:, None] >> np.arange(n)[None, :]) & 1   # [K,n]
+    rhos = np.where(pat_bits[None, :, :] > 0,
+                    pi[:, None, :], nu[:, None, :]).reshape(v * k, n)
+    allowed = np.tile(np.arange(k, dtype=np.int64), v) if fno else None
+    pow2 = (1 << np.arange(n)).astype(np.int64)
+    out = np.empty(v * k, np.int64)
+    for lo in range(0, v * k, chunk):
+        hi = min(lo + chunk, v * k)
+        mask = rho_exhaustive_tables(
+            costs, rhos[lo:hi], miss_penalty,
+            allowed=None if allowed is None else allowed[lo:hi])
+        out[lo:hi] = mask @ pow2
+    return out.reshape(v, k)
 
 
 def cs_fna_batched(indications, costs, q, fp, fn, miss_penalty) -> jax.Array:

@@ -151,6 +151,36 @@ def exhaustive(costs: Sequence[float], rhos: Sequence[float], miss_penalty: floa
     return best_sel
 
 
+def exhaustive_mask(costs: Sequence[float], rhos: Sequence[float],
+                    miss_penalty: float) -> int:
+    """:func:`exhaustive` returning the selection as a bitmask.
+
+    Decision-identical to ``exhaustive`` (same ascending-mask enumeration,
+    same pruning, same EPS dead-band) with the per-call overhead stripped —
+    the scalar inner call of the calibrated fast engine's bridge/table
+    paths when the exhaustive subroutine is configured.
+    """
+    n = len(costs)
+    if n > 20:
+        raise ValueError("exhaustive_mask() limited to n <= 20")
+    best_mask = 0
+    best_cost = miss_penalty
+    for mask in range(1, 1 << n):
+        c, p = 0.0, miss_penalty
+        for j in range(n):
+            if mask >> j & 1:
+                c += costs[j]
+                p *= rhos[j]
+                if c >= best_cost:  # prune
+                    break
+        else:
+            v = c + p
+            if v < best_cost - EPS:
+                best_cost = v
+                best_mask = mask
+    return best_mask
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 2: CS_FNA / CS_FNO
 # ---------------------------------------------------------------------------

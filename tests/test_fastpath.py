@@ -77,10 +77,73 @@ def test_hocs_parity_many_caches():
     _assert_results_identical(ref, fast)
 
 
-def test_fast_parity_with_exhaustive_subroutine():
+@pytest.mark.parametrize("policy", ("fna", "fno"))
+def test_fast_parity_with_exhaustive_subroutine(policy):
+    """The batched 2^n-subset enumeration path (``exhaustive_tables``)
+    must match the reference loop's scalar exhaustive calls for both the
+    all-candidates and the positive-only policies."""
     trace = get_trace("gradle", 5_000, seed=11)
-    _, ref, _, fast = _run_pair("fna", trace, alg="exhaustive")
+    _, ref, _, fast = _run_pair(policy, trace, alg="exhaustive")
     _assert_results_identical(ref, fast)
+
+
+def test_fast_parity_exhaustive_four_caches():
+    trace = get_trace("scarab", 4_000, seed=3)
+    _, ref, _, fast = _run_pair("fna", trace, alg="exhaustive", n_caches=4,
+                                costs=(1.0, 2.0, 3.0, 1.5))
+    _assert_results_identical(ref, fast)
+
+
+def test_exhaustive_tables_match_scalar_exhaustive():
+    """The batched subset-DP tables are decision-identical to the scalar
+    2^n enumeration over a (version x pattern) grid, including the
+    CS_FNO candidate restriction, and the rho-matrix variant honours
+    arbitrary ``allowed`` masks."""
+    from repro.core.batched import exhaustive_tables, rho_exhaustive_tables
+    from repro.core.policies import exhaustive
+
+    rng = np.random.default_rng(2)
+    n, v = 4, 9
+    costs = rng.uniform(0.5, 5.0, n)
+    pi = rng.uniform(0.0, 1.0, (v, n))
+    nu = rng.uniform(0.0, 1.0, (v, n))
+    m = 100.0
+    fna_tab = exhaustive_tables(costs, pi, nu, m)
+    fno_tab = exhaustive_tables(costs, pi, nu, m, fno=True)
+    for vi in range(v):
+        for p in range(1 << n):
+            rhos = [pi[vi, j] if (p >> j) & 1 else nu[vi, j]
+                    for j in range(n)]
+            want = 0
+            for j in exhaustive(costs, rhos, m):
+                want |= 1 << j
+            assert fna_tab[vi, p] == want, (vi, p)
+            pos = [j for j in range(n) if (p >> j) & 1]
+            want_fno = 0
+            if pos:
+                sub = exhaustive([costs[j] for j in pos],
+                                 [pi[vi, j] for j in pos], m)
+                for t in sub:
+                    want_fno |= 1 << pos[t]
+            assert fno_tab[vi, p] == want_fno, (vi, p)
+    # rho-matrix variant: random rho rows, random allowed masks
+    rhos = rng.uniform(0.0, 1.0, (301, n))
+    allowed = rng.integers(0, 1 << n, 301, dtype=np.int64)
+    pow2 = (1 << np.arange(n)).astype(np.int64)
+    got = rho_exhaustive_tables(costs, rhos, m, allowed=allowed) @ pow2
+    for i in range(rhos.shape[0]):
+        best_mask, best_cost = 0, m
+        for mask in range(1, 1 << n):
+            if mask & ~int(allowed[i]):
+                continue
+            c = sum(costs[j] for j in range(n) if mask >> j & 1)
+            pr = m
+            for j in range(n):
+                if mask >> j & 1:
+                    pr *= rhos[i, j]
+            if c + pr < best_cost - 1e-12:
+                best_cost, best_mask = c + pr, mask
+        assert got[i] == best_mask, i
 
 
 def test_fast_parity_across_update_intervals():

@@ -61,12 +61,29 @@ def test_fna_cal_parity_across_settings(trace_name, cfg_kw):
     _assert_results_identical(ref, fast)
 
 
-def test_fna_cal_exhaustive_falls_back_to_reference():
-    """The segmented engine's verification pass is DS_PGM-specific, so the
-    exhaustive subroutine must transparently run the reference loop."""
+@pytest.mark.parametrize("n_caches", (3, 4))
+def test_fna_cal_exhaustive_runs_fast_engine(n_caches):
+    """The segmented engine's verification pass now has an exhaustive
+    twin (the batched 2^n-subset enumeration), so ``alg="exhaustive"``
+    runs the fast engine for n <= 8 — bit-exactly."""
     trace = get_trace("gradle", 3_000, seed=2)
-    base = SimConfig(cache_size=1_000, policy="fna_cal", alg="exhaustive",
-                     update_interval=200)
+    base = SimConfig(n_caches=n_caches, cache_size=1_000, policy="fna_cal",
+                     alg="exhaustive", update_interval=200)
+    ref = Simulator(dataclasses.replace(base, engine="reference")).run(trace)
+    sim = Simulator(dataclasses.replace(base, engine="fast"))
+    fast = sim.run(trace)
+    _assert_results_identical(ref, fast)
+    # the speculative replay really ran: the shared artifact is published
+    assert isinstance(sim.last_system, SystemTrace)
+
+
+def test_fna_cal_exhaustive_many_caches_falls_back_to_reference():
+    """Past the 2^n table budget (n > 8) the calibrated+exhaustive combo
+    transparently drops to the reference loop — same results, no shared
+    artifact."""
+    trace = get_trace("gradle", 1_500, seed=2)
+    base = SimConfig(n_caches=9, cache_size=200, policy="fna_cal",
+                     alg="exhaustive", update_interval=100)
     ref = Simulator(dataclasses.replace(base, engine="reference")).run(trace)
     sim = Simulator(dataclasses.replace(base, engine="fast"))
     fast = sim.run(trace)

@@ -1,0 +1,123 @@
+"""Regenerate the golden differential files in ``tests/golden/``.
+
+Every scenario in ``repro.cachesim.scenarios.GOLDEN_SCENARIOS`` pins a
+small, fixed sub-grid (``Scenario.golden_grid()``): this script runs that
+grid on the REFERENCE engine — the bit-exact per-request oracle — and
+writes one JSON file per scenario holding the exact ``SimResult`` of
+every (trace, cell, policy).  ``tests/test_golden_scenarios.py`` then
+asserts the FAST engine reproduces each file bit-for-bit, so fast-path
+parity and scenario semantics are pinned for every future change.
+
+Usage::
+
+    PYTHONPATH=src python tools/regen_golden.py            # rewrite all
+    PYTHONPATH=src python tools/regen_golden.py fig4_gradle
+    PYTHONPATH=src python tools/regen_golden.py --check    # exit 1 if stale
+
+Golden files are deterministic: pure NumPy float64 + Python floats, JSON
+with sorted keys — regenerating on any platform must produce an
+identical byte stream (CI regenerates and fails on any diff).  If a
+change legitimately alters simulator semantics, rerun this script and
+commit the new files WITH the change, explaining the drift in the PR.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.cachesim.scenarios import GOLDEN_SCENARIOS, get_scenario  # noqa: E402
+from repro.cachesim.simulator import SimResult  # noqa: E402
+from repro.cachesim.sweep import cell_label, run_grid  # noqa: E402
+
+GOLDEN_DIR = REPO / "tests" / "golden"
+
+#: every raw SimResult accumulator, pinned exactly (no rounding)
+RESULT_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
+
+
+def _jsonable(v):
+    return list(v) if isinstance(v, tuple) else v
+
+
+def golden_payload(name: str) -> dict:
+    """Run one scenario's golden sub-grid on the reference engine."""
+    sc = get_scenario(name)
+    traces, values = sc.golden_grid()
+    base = sc.config(engine="reference", **sc.golden_base)
+    grid = run_grid(traces, base, sc.axis, values,
+                    policies=sc.policies, share_system=False)
+    cells = []
+    for value in values:          # deterministic order: values, then traces
+        label = cell_label(sc.axis, value)
+        for trace_name in traces:
+            for policy, res in grid[(trace_name, label)].items():
+                cells.append({
+                    "trace": trace_name,
+                    "label": _jsonable(label),
+                    "policy": policy,
+                    "result": {f: getattr(res, f) for f in RESULT_FIELDS},
+                })
+    return {
+        "scenario": sc.name,
+        "engine": "reference",
+        "axis": sc.axis,
+        "n_requests": sc.golden_n_requests,
+        "seed": sc.seed,
+        "golden_base": {k: _jsonable(v) for k, v in sc.golden_base.items()},
+        "policies": list(sc.policies),
+        "regenerate_with": "PYTHONPATH=src python tools/regen_golden.py",
+        "cells": cells,
+    }
+
+
+def render(payload: dict) -> str:
+    return json.dumps(payload, indent=1, sort_keys=True) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("scenarios", nargs="*", default=[],
+                    help=f"subset to regenerate (default: all of "
+                         f"{', '.join(GOLDEN_SCENARIOS)})")
+    ap.add_argument("--check", action="store_true",
+                    help="don't write; exit 1 if any file is stale/missing")
+    args = ap.parse_args(argv)
+    names = args.scenarios or list(GOLDEN_SCENARIOS)
+    unknown = [n for n in names if n not in GOLDEN_SCENARIOS]
+    if unknown:
+        # a file outside GOLDEN_SCENARIOS would fail test_golden_coverage
+        # and never be freshness-checked — refuse to create one
+        ap.error(f"not golden scenario(s): {', '.join(unknown)} "
+                 f"(golden: {', '.join(GOLDEN_SCENARIOS)}; add the name to "
+                 f"repro.cachesim.scenarios.GOLDEN_SCENARIOS first)")
+
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    stale = []
+    for name in names:
+        path = GOLDEN_DIR / f"{name}.json"
+        text = render(golden_payload(name))
+        on_disk = path.read_text() if path.exists() else None
+        if text == on_disk:
+            print(f"  ok     {path.relative_to(REPO)}")
+            continue
+        if args.check:
+            stale.append(path.relative_to(REPO))
+            print(f"  STALE  {path.relative_to(REPO)}")
+        else:
+            path.write_text(text)
+            print(f"  wrote  {path.relative_to(REPO)}")
+    if stale:
+        print(f"\n{len(stale)} golden file(s) out of date; regenerate with\n"
+              f"  PYTHONPATH=src python tools/regen_golden.py")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
