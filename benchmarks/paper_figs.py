@@ -41,7 +41,7 @@ from repro.cachesim.scenarios import (
     list_scenarios,
     run_scenario,
 )
-from repro.cachesim.sweep import hashable_label
+from repro.cachesim.sweep import axis_column, hashable_label
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 FIGS_DIR = Path(__file__).resolve().parent.parent / "artifacts" / "figs"
@@ -78,7 +78,11 @@ def pivot_cells(records: Sequence[dict], axis: str) -> List[dict]:
     cell): ``{"trace", axis, "cost": {policy: mean_cost}, ...}``.  Cells
     keep first-seen order (the grid's sweep order); the scenario enters
     the key because a multi-scenario figure (e.g. Fig. 5's two
-    cadences) revisits the same (trace, axis-value) pairs."""
+    cadences) revisits the same (trace, axis-value) pairs.  ``axis`` is
+    resolved through :func:`repro.cachesim.sweep.axis_column`, so callers
+    pass the scenario's axis name even when its records carry the
+    collision-prefixed column."""
+    axis = axis_column(axis)
     cells: Dict[tuple, dict] = {}
     for r in records:
         key = (r.get("scenario"), r["trace"], hashable_label(r[axis]))
@@ -106,6 +110,7 @@ def curves(records: Sequence[dict], axis: str) -> Dict[str, Dict[str, list]]:
     """``{trace: {policy: [[x, mean_cost], ...]}}`` — the per-policy cost
     curves the JSON artifact carries (x is the axis label; per-cache
     tuples serialise as lists)."""
+    axis = axis_column(axis)
     out: Dict[str, Dict[str, list]] = {}
     for cell in pivot_cells(records, axis):
         tr = out.setdefault(cell["trace"], {})
@@ -240,14 +245,15 @@ def plot_scenario(sc: Scenario, records: Sequence[dict], path: Path) -> bool:
         import matplotlib.pyplot as plt
     except ImportError:
         return False
-    cells = pivot_cells(records, sc.axis)
+    col = axis_column(sc.axis)
+    cells = pivot_cells(records, col)
     traces = list(dict.fromkeys(c["trace"] for c in cells))
     fig, axes = plt.subplots(1, len(traces),
                              figsize=(4.6 * len(traces), 3.4),
                              squeeze=False, sharey=True)
     for ax, tr in zip(axes[0], traces):
         sub = [c for c in cells if c["trace"] == tr]
-        xs = [c[sc.axis] for c in sub]
+        xs = [c[col] for c in sub]
         categorical = any(isinstance(x, (tuple, list)) for x in xs)
         pos = list(range(len(xs))) if categorical else xs
         for policy in sc.policies:

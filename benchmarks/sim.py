@@ -1,12 +1,14 @@
 """Simulator throughput benchmarks: requests/sec per policy x trace on the
 fast engine, the headline fast-vs-reference comparisons
 (``sim_speedup_fna_gradle``, ``sim_speedup_fna_cal_gradle``), and the
-shared-SystemTrace amortisation of multi-policy runs
-(``sweep_amortisation``).
+shared-SystemTrace amortisation rows: multi-policy runs
+(``sweep_amortisation``) and decision-side grid cells
+(``sweep_amortisation_decision`` — the Fig. 3 miss-penalty axis as one
+sweep + stacked tables + replays vs per-cell full runs).
 
 CSV columns: us_per_call = wall-clock per simulated request; derived =
 requests/sec (or the speedup/amortisation factor for the ``sim_speedup`` /
-``sweep_amortisation`` rows).
+``sweep_amortisation*`` rows).
 """
 from __future__ import annotations
 
@@ -15,6 +17,10 @@ import time
 HEADLINE_REQUESTS = 200_000      # the acceptance benchmark (gradle)
 POLICIES = ("fna", "fno", "pi", "hocs", "fna_cal")
 SWEEP_POLICIES = POLICIES
+#: the decision-axis amortisation grid (miss_penalty is decision-side:
+#: every cell shares one SystemTrace per trace)
+DECISION_PENALTIES = (25.0, 50.0, 75.0, 100.0, 150.0, 250.0, 500.0, 1000.0)
+DECISION_POLICIES = ("fna", "fno", "pi")
 
 
 def _run_once(cfg, trace):
@@ -68,6 +74,28 @@ def run_sim_benches(full: bool):
     out.append(("sweep_amortisation",
                 dt_shared / (n_amort * len(SWEEP_POLICIES)) * 1e6,
                 dt_indep / dt_shared))
+
+    # --- decision-side cross-cell sharing: a miss-penalty grid (the
+    # Fig. 3 axis) computes ONE SystemTrace for all its cells and stacks
+    # the ds_pgm tables into one batched call, vs per-cell full runs ----
+    from repro.cachesim.sweep import run_grid
+    n_dec = 100_000 if full else 50_000
+    grid_traces = {"gradle": get_trace("gradle", n_dec, seed=0)}
+    dec_base = SimConfig(engine="fast", update_interval=200)
+
+    def _time_grid(shared: bool) -> float:
+        t0 = time.time()
+        run_grid(grid_traces, dec_base, "miss_penalty", DECISION_PENALTIES,
+                 policies=DECISION_POLICIES, share_system=shared)
+        return time.time() - t0
+
+    _time_grid(True)                                         # warm
+    dt_dec_shared = min(_time_grid(True) for _ in range(2))
+    dt_dec_indep = min(_time_grid(False) for _ in range(2))
+    cells = len(DECISION_PENALTIES) * len(DECISION_POLICIES)
+    out.append(("sweep_amortisation_decision",
+                dt_dec_shared / (n_dec * cells) * 1e6,
+                dt_dec_indep / dt_dec_shared))
 
     # --- requests/sec per policy x trace (fast engine) ------------------
     n_req = 100_000 if full else 30_000

@@ -14,6 +14,14 @@ beyond-paper regimes) that drive ``benchmarks/paper_figs.py`` and the
 golden differential suite.  See the ``repro.cachesim.simulator`` module
 docstring for the invariant statement.
 """
+from repro.cachesim.engine import (
+    DecisionPlan,
+    PROVIDERS,
+    TablePlan,
+    plan_for,
+    register_provider,
+    run_cells,
+)
 from repro.cachesim.lru import LRUCache
 from repro.cachesim.scenarios import (
     GOLDEN_SCENARIOS,
@@ -31,4 +39,6 @@ from repro.cachesim.traces import get_trace, TRACES
 __all__ = ["LRUCache", "SimConfig", "SimResult", "Simulator", "SystemTrace",
            "Scenario", "SCENARIOS", "GOLDEN_SCENARIOS", "get_scenario",
            "list_scenarios", "run_scenario", "run_policies", "run_grid",
-           "run_sweep", "sweep_records", "get_trace", "TRACES"]
+           "run_sweep", "sweep_records", "get_trace", "TRACES",
+           "DecisionPlan", "TablePlan", "PROVIDERS", "plan_for",
+           "register_provider", "run_cells"]

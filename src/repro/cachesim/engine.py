@@ -1,0 +1,399 @@
+"""Decision-plan layer of the fast engine: pluggable policy-table
+providers and cross-cell sharing for decision-side sweep axes.
+
+The fast engine runs in three phases (see ``repro.cachesim.simulator``):
+
+  1. SYSTEM SWEEP — the policy-independent
+     :class:`~repro.cachesim.systemstate.SystemTrace`, computed once per
+     (trace, system config);
+  2. DECISION PLAN — this module: how a given (policy, subroutine)
+     configuration turns the sweep's view history into per-request
+     selections;
+  3. REPLAY — vectorised table lookups + the scalar cost fold
+     (``repro.cachesim.fastpath.accumulate_replay``).
+
+Phase 2 is a REGISTRY of :class:`DecisionPlan` providers rather than an
+``if/elif`` ladder: ``plan_for(cfg)`` returns the first registered plan
+whose :meth:`~DecisionPlan.matches` accepts the configuration, or
+``None`` when the configuration is outside every plan's budget (the
+simulator then falls back to the reference loop).  The built-in registry,
+in match order:
+
+  ================  =====================================================
+  ``fna_cal``       speculative segmented replay
+                    (``repro.cachesim.fna_cal_fast``) — the one policy
+                    whose state moves per probe outcome
+  ``pi``            the perfect-information lower bound: a direct
+                    vectorised replay (its "table" is the membership bit)
+  ``hocs``          Algorithm 1 decision tables via the exact batched
+                    mirror ``repro.core.batched.hocs_selection_tables``
+  ``ds_pgm``        (version x pattern) tables in one batched
+                    ``repro.core.batched.selection_tables`` call
+                    (CS_FNA and CS_FNO)
+  ``exhaustive``    the batched 2^n-subset enumeration
+                    (``repro.core.batched.exhaustive_tables``, n <= 8)
+  ``scalar``        the generic fallback: one scalar ``sim.alg`` call per
+                    (version, pattern) — the ONLY remaining scalar table
+                    loop, reachable only when no batched provider matches
+                    (today: the exhaustive subroutine at 8 < n <= 12)
+  ================  =====================================================
+
+Table plans memoise their ``[V * 2^n]`` selection-bitmask arrays on the
+shared ``SystemTrace`` (``st.plan_cache``), keyed by the decision-side
+configuration (costs, miss penalty, CS_FNO flag).  That cache is also the
+hand-off point for CROSS-CELL sharing: a decision-side sweep axis (miss
+penalty, access-cost vector, policy — anything that leaves
+``SystemTrace.system_key`` unchanged) produces a group of cells that
+differ only in their plan inputs, so :func:`run_cells` computes ONE
+system sweep for the whole group and :func:`prefetch_tables` stacks every
+ds_pgm-family (cell, policy) table build into a single
+``repro.core.batched.selection_tables_cells`` evaluation.  A C-cell,
+P-policy decision grid therefore costs one sweep + one stacked table
+batch + C*P cheap replays instead of C*P full simulations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.batched import MAX_EXHAUSTIVE_TABLE_CACHES
+
+# 2^n table rows per version: past this the reference loop is the better
+# deal for every provider (single source of truth for the fast engine)
+MAX_TABLE_CACHES = 12
+
+
+# ---------------------------------------------------------------------------
+# Plan protocol
+# ---------------------------------------------------------------------------
+
+class DecisionPlan:
+    """One policy family's replay strategy against a shared SystemTrace."""
+
+    name = "?"
+
+    def matches(self, cfg) -> bool:
+        """Whether this plan covers ``cfg`` (policy, subroutine, budget)."""
+        raise NotImplementedError
+
+    def replay(self, sim, st, res):
+        """Phase 2+3: produce per-request selections for ``sim`` against
+        the shared sweep ``st`` and fold them into ``res``."""
+        raise NotImplementedError
+
+
+class TablePlan(DecisionPlan):
+    """A plan whose decisions are a pure (view version, indication
+    pattern) function — phase 2 builds ``[V * 2^n]`` selection bitmasks,
+    phase 3 is a vectorised lookup.  Tables are memoised on
+    ``st.plan_cache`` under :meth:`cache_key`, which is how the sweep
+    runner's stacked prefetch hands them over."""
+
+    def cache_key(self, cfg) -> tuple:
+        """The decision-side configuration the tables depend on."""
+        raise NotImplementedError
+
+    def tables(self, sim, st) -> np.ndarray:
+        """[V * 2^n] int64 selection bitmasks, row (v * 2^n + p)."""
+        raise NotImplementedError
+
+    def replay(self, sim, st, res):
+        from repro.cachesim.fastpath import accumulate_replay
+        cfg = sim.cfg
+        key = self.cache_key(cfg)
+        selm_tab = st.plan_cache.get(key)
+        if selm_tab is None:
+            selm_tab = self.tables(sim, st)
+            st.plan_cache[key] = selm_tab
+        k = 1 << st.n
+        selm = selm_tab[st.ver_per_req * k + st.pats]            # [N]
+        return accumulate_replay(res, st, selm, list(cfg.costs),
+                                 cfg.miss_penalty)
+
+
+# ---------------------------------------------------------------------------
+# Built-in providers
+# ---------------------------------------------------------------------------
+
+class FnaCalSegmented(DecisionPlan):
+    """The calibrated policy: per-probe EWMA state breaks the frozen-view
+    invariant, so it replays via the speculate-and-commit segments of
+    ``repro.cachesim.fna_cal_fast`` (whose speculation tables come from
+    the same batched builders as the table plans below)."""
+
+    name = "fna_cal"
+
+    def matches(self, cfg) -> bool:
+        if cfg.policy != "fna_cal":
+            return False
+        # the verification pass needs the batched subset enumeration;
+        # past its budget the reference loop wins
+        return cfg.alg != "exhaustive" or \
+            cfg.n_caches <= MAX_EXHAUSTIVE_TABLE_CACHES
+
+    def replay(self, sim, st, res):
+        from repro.cachesim.fna_cal_fast import replay_fna_cal
+        return replay_fna_cal(sim, st, res)
+
+
+class PiReplay(DecisionPlan):
+    """PI accesses the cheapest cache truly holding x; hash placement
+    means only the designated cache can — so membership IS the plan."""
+
+    name = "pi"
+
+    def matches(self, cfg) -> bool:
+        return cfg.policy == "pi"
+
+    def replay(self, sim, st, res):
+        costs = list(sim.cfg.costs)
+        M = sim.cfg.miss_penalty
+        cost_arr = np.where(st.in_dj,
+                            np.asarray(costs, np.float64)[st.dj_all], M)
+        hits = int(np.count_nonzero(st.in_dj))
+        posm = ((st.pats >> st.dj_all) & 1).astype(bool) & st.in_dj
+        pos_acc = int(np.count_nonzero(posm))
+        total_cost = res.total_cost
+        for c in cost_arr.tolist():
+            total_cost += c
+        res.total_cost = total_cost
+        res.hits += hits
+        res.pos_accesses += pos_acc
+        res.neg_accesses += hits - pos_acc
+        res.n_requests += st.trace_len
+        return res
+
+
+class HocsTables(TablePlan):
+    """Algorithm 1 on pooled homogeneous estimates, via the exact batched
+    mirror (``repro.core.batched.hocs_selection_tables``).  The tables do
+    not depend on the (homogeneous) cost level, so a costs-axis decision
+    grid shares one build across its cells."""
+
+    name = "hocs"
+
+    def matches(self, cfg) -> bool:
+        return cfg.policy == "hocs"
+
+    def cache_key(self, cfg) -> tuple:
+        return ("hocs", float(cfg.miss_penalty))
+
+    def tables(self, sim, st) -> np.ndarray:
+        from repro.core.batched import hocs_selection_tables
+        return hocs_selection_tables(
+            st.pi_v, st.nu_v, sim.cfg.miss_penalty).reshape(-1)
+
+
+class DsPgmTables(TablePlan):
+    """CS_FNA / CS_FNO with the DS_PGM subroutine — the batched JAX path
+    (float64, bit-exact modulo the ~1e-12 near-tie caveat documented on
+    ``repro.core.batched.selection_tables``)."""
+
+    name = "ds_pgm"
+
+    def matches(self, cfg) -> bool:
+        return cfg.policy in ("fna", "fno") and cfg.alg == "ds_pgm"
+
+    def cache_key(self, cfg) -> tuple:
+        return ("ds_pgm", cfg.policy == "fno", tuple(cfg.costs),
+                float(cfg.miss_penalty))
+
+    def tables(self, sim, st) -> np.ndarray:
+        from repro.core.batched import selection_tables
+        cfg = sim.cfg
+        n = st.n
+        k = 1 << n
+        pi_mat, nu_mat = st.pi_v, st.nu_v
+        v_count = pi_mat.shape[0]
+        # pad V to a power-of-two bucket: XLA compiles per shape, and
+        # bucketing makes shapes recur across runs (padding rows are
+        # copies of the last version; their masks are discarded)
+        vpad = 1 << max(4, (v_count - 1).bit_length())
+        if vpad > v_count:
+            pi_mat = np.concatenate(
+                [pi_mat, np.repeat(pi_mat[-1:], vpad - v_count, 0)])
+            nu_mat = np.concatenate(
+                [nu_mat, np.repeat(nu_mat[-1:], vpad - v_count, 0)])
+        mask = selection_tables(list(cfg.costs), pi_mat, nu_mat,
+                                cfg.miss_penalty,
+                                fno=(cfg.policy == "fno"))
+        pow2 = 1 << np.arange(n, dtype=np.int64)
+        return (mask.reshape(-1, n)[:v_count * k] @ pow2).astype(np.int64)
+
+
+class ExhaustiveTables(TablePlan):
+    """CS_FNA / CS_FNO with the exact Eq. (10) subroutine — the batched
+    2^n-subset enumeration (IEEE operation-order-exact vs the scalar
+    loop; n <= 8)."""
+
+    name = "exhaustive"
+
+    def matches(self, cfg) -> bool:
+        return cfg.policy in ("fna", "fno") and cfg.alg == "exhaustive" \
+            and cfg.n_caches <= MAX_EXHAUSTIVE_TABLE_CACHES
+
+    def cache_key(self, cfg) -> tuple:
+        return ("exhaustive", cfg.policy == "fno", tuple(cfg.costs),
+                float(cfg.miss_penalty))
+
+    def tables(self, sim, st) -> np.ndarray:
+        from repro.core.batched import exhaustive_tables
+        cfg = sim.cfg
+        return exhaustive_tables(list(cfg.costs), st.pi_v, st.nu_v,
+                                 cfg.miss_penalty,
+                                 fno=(cfg.policy == "fno")).reshape(-1)
+
+
+class ScalarTables(TablePlan):
+    """Generic fallback: one scalar subroutine call per (version,
+    pattern).  The only scalar table loop left in the fast engine —
+    reachable only when no batched provider matches (today: the
+    exhaustive subroutine at 8 < n <= 12, where the batched subset
+    matrix would outgrow its budget)."""
+
+    name = "scalar"
+
+    def matches(self, cfg) -> bool:
+        return cfg.policy in ("fna", "fno")
+
+    def cache_key(self, cfg) -> tuple:
+        return ("scalar", cfg.alg, cfg.policy == "fno", tuple(cfg.costs),
+                float(cfg.miss_penalty))
+
+    def tables(self, sim, st) -> np.ndarray:
+        cfg = sim.cfg
+        costs = list(cfg.costs)
+        M = cfg.miss_penalty
+        n = st.n
+        k = 1 << n
+        fno = cfg.policy == "fno"
+        v_count = st.pi_v.shape[0]
+        sel = np.empty(v_count * k, dtype=np.int64)
+        for v in range(v_count):
+            pi, nu = st.pi_v[v], st.nu_v[v]
+            for p in range(k):
+                if fno:
+                    pos = [j for j in range(n) if (p >> j) & 1]
+                    chosen = []
+                    if pos:
+                        sub = sim.alg([costs[j] for j in pos],
+                                      [float(pi[j]) for j in pos], M)
+                        chosen = [pos[t] for t in sub]
+                else:
+                    rhos = [float(pi[j]) if (p >> j) & 1 else float(nu[j])
+                            for j in range(n)]
+                    chosen = sim.alg(costs, rhos, M)
+                m = 0
+                for j in chosen:
+                    m |= 1 << j
+                sel[v * k + p] = m
+        return sel
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+#: ordered provider registry — first match wins; the scalar fallback last
+PROVIDERS: List[DecisionPlan] = [
+    FnaCalSegmented(), PiReplay(), HocsTables(), DsPgmTables(),
+    ExhaustiveTables(), ScalarTables(),
+]
+
+
+def register_provider(plan: DecisionPlan, *, index: int = 0) -> None:
+    """Install a custom provider (at ``index``, so it can shadow a
+    built-in; the scalar fallback should stay last)."""
+    PROVIDERS.insert(index, plan)
+
+
+def plan_for(cfg) -> Optional[DecisionPlan]:
+    """The first registered plan covering ``cfg``, or ``None`` when the
+    configuration is outside every plan's budget (the simulator falls
+    back to the reference loop)."""
+    if cfg.n_caches > MAX_TABLE_CACHES:
+        return None
+    for plan in PROVIDERS:
+        if plan.matches(cfg):
+            return plan
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Cross-cell sharing for decision-side sweep axes
+# ---------------------------------------------------------------------------
+
+def prefetch_tables(system, cfgs: Sequence, policies: Sequence[str]) -> None:
+    """Stack every ds_pgm-family (cell, policy) table build of a
+    decision-side group into ONE batched
+    ``repro.core.batched.selection_tables_cells`` call, seeding
+    ``system.plan_cache`` so the per-cell replays become pure lookups.
+
+    Row-level independence of ``ds_pgm_batched`` makes each stacked slice
+    bit-identical to the per-cell build it replaces."""
+    ds_plan = next(p for p in PROVIDERS if isinstance(p, DsPgmTables))
+    jobs = []                # (cache key, costs, penalty, fno)
+    seen = set()
+    for cfg in cfgs:
+        for p in policies:
+            pcfg = dataclasses.replace(cfg, policy=p)
+            if not isinstance(plan_for(pcfg), DsPgmTables):
+                continue
+            key = ds_plan.cache_key(pcfg)
+            if key in system.plan_cache or key in seen:
+                continue
+            seen.add(key)
+            jobs.append((key, tuple(pcfg.costs),
+                         float(pcfg.miss_penalty), p == "fno"))
+    if len(jobs) < 2:        # a single build gains nothing from stacking
+        return
+    from repro.core.batched import selection_tables_cells
+    masks = selection_tables_cells(
+        [j[1] for j in jobs], system.pi_v, system.nu_v,
+        [j[2] for j in jobs], [j[3] for j in jobs])      # [C, V, 2^n, n]
+    n = system.n
+    pow2 = 1 << np.arange(n, dtype=np.int64)
+    for (key, *_), mask in zip(jobs, masks):
+        system.plan_cache[key] = \
+            (mask.reshape(-1, n) @ pow2).astype(np.int64)
+
+
+def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
+              share_system: bool = True) -> List[Dict]:
+    """Run a policy panel over several decision-side cells that share one
+    system evolution; returns ``[{policy: SimResult}]`` aligned with
+    ``cfgs``.
+
+    On the fast engine with ``share_system=True`` the policy-independent
+    system sweep is computed EXACTLY ONCE for the whole group (all cells
+    must share ``SystemTrace.system_key`` — ``repro.cachesim.sweep``
+    groups cells accordingly) and the ds_pgm-family decision tables of
+    every (cell, policy) are prefetched in one stacked batched call.
+    ``share_system=False`` forces independent full runs (benchmarking the
+    amortisation itself); the reference engine always runs full.
+    """
+    from repro.cachesim.simulator import Simulator
+    from repro.cachesim.systemstate import SystemTrace
+    trace = np.asarray(trace, dtype=np.uint64)
+    out: List[Dict] = [dict() for _ in cfgs]
+    system = None
+    share = share_system and bool(cfgs) and trace.shape[0] > 0 and \
+        all(cfg.engine == "fast" for cfg in cfgs)
+    if share:
+        fastable = any(
+            plan_for(dataclasses.replace(cfg, policy=p)) is not None
+            for cfg in cfgs for p in policies)
+        if fastable:
+            donor = Simulator(cfgs[0])
+            system = SystemTrace.compute(donor, trace)
+            prefetch_tables(system, cfgs, policies)
+    for ci, cfg in enumerate(cfgs):
+        for p in policies:
+            sim = Simulator(dataclasses.replace(cfg, policy=p))
+            out[ci][p] = sim.run(trace,
+                                 system=system if share_system else None)
+            if share_system and system is None:
+                system = getattr(sim, "last_system", None)
+    return out

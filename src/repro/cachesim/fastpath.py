@@ -1,4 +1,4 @@
-"""Fast engine, policy side: decision tables + vectorised replay.
+"""Fast engine, policy side: decision-plan dispatch + vectorised replay.
 
 Bit-exact twin of ``Simulator._run_reference`` built on the invariants
 documented in the ``repro.cachesim.simulator`` module docstring (I1:
@@ -21,19 +21,24 @@ The engine therefore runs in phases:
      POLICY-INDEPENDENT: :func:`run_fast` computes a
      :class:`~repro.cachesim.systemstate.SystemTrace` once per (trace,
      system config) and ``run_policies``/``repro.cachesim.sweep`` reuse
-     one artifact across every policy, so a P-policy comparison costs one
-     sweep plus P cheap replays instead of P full runs.
+     one artifact across every policy AND across every decision-side
+     sweep cell, so a P-policy, C-cell comparison costs one sweep plus
+     P*C cheap replays instead of P*C full runs.
 
-  2. BATCHED TABLES — by I2, a decision within a view version is a pure
+  2. DECISION PLAN — by I2, a decision within a view version is a pure
      function of the n-bit indication pattern, so the whole run needs at
-     most V * 2^n distinct selections.  All of them are computed in ONE
-     ``repro.core.batched.ds_pgm_batched`` call (float64, see
-     ``selection_tables``) — the JAX router path, fed the simulator's
-     entire version history at once.
+     most V * 2^n distinct selections.  HOW those are produced is the
+     provider registry of ``repro.cachesim.engine``: batched JAX DS_PGM
+     tables, the exact HOCS mirror, the 2^n-subset enumeration, the
+     generic scalar fallback, the segmented ``fna_cal`` replay, or the
+     direct PI replay — ``plan_for(cfg)`` picks the first match, and
+     table plans memoise their output on the shared SystemTrace so
+     decision-side sweeps can prefetch them stacked.
 
   3. REPLAY — selections, hits and access counts become vectorised table
-     lookups over the trace; only the service-cost accumulation stays a
-     scalar fold so float-addition order matches the reference exactly.
+     lookups over the trace (:func:`accumulate_replay`); only the
+     service-cost accumulation stays a scalar fold so float-addition
+     order matches the reference exactly.
 
 ``fna_cal`` breaks I2 — its empirical EWMAs move on every probe outcome —
 so phases 2-3 are replaced by the speculative segmented replay in
@@ -47,7 +52,8 @@ improvement dead-band.  The two can only disagree when two prefix costs
 coincide to within ~1e-12 absolute — a measure-zero coincidence of the
 data-derived estimates, ruled out empirically by the parity suite
 (``tests/test_fastpath.py``) across every policy x trace x interval
-combination tested.
+combination tested.  The HOCS mirror carries the analogous caveat on its
+candidate shortlist (``repro.core.batched.hocs_fna_batched``).
 """
 from __future__ import annotations
 
@@ -57,86 +63,6 @@ import numpy as np
 
 from repro.cachesim.simulator import SimResult, Simulator
 from repro.cachesim.systemstate import SystemTrace
-from repro.core import hocs_fna
-from repro.core.batched import MAX_EXHAUSTIVE_TABLE_CACHES as _MAX_EXH_TABLE_CACHES
-from repro.core.policies import ds_pgm, exhaustive
-
-# 2^n tables per version: past this the reference loop is the better deal
-_MAX_TABLE_CACHES = 12
-
-
-def _selection_masks(sim: Simulator, pi_v: np.ndarray, nu_v: np.ndarray,
-                     costs, miss_penalty: float) -> np.ndarray:
-    """[V * 2^n] selection bitmasks — phase 2, one row per (version,
-    indication-pattern) pair."""
-    cfg = sim.cfg
-    n = cfg.n_caches
-    k = 1 << n
-    v_count = pi_v.shape[0]
-    pow2 = 1 << np.arange(n, dtype=np.int64)
-    if cfg.policy == "hocs":   # Algorithm 1 on pooled homogeneous estimates
-        pos_by_p = [[j for j in range(n) if (p >> j) & 1] for p in range(k)]
-        neg_by_p = [[j for j in range(n) if not (p >> j) & 1]
-                    for p in range(k)]
-        sel = np.empty(v_count * k, dtype=np.int64)
-        for v in range(v_count):
-            # left-to-right Python sum: bit-identical to the reference
-            # loop's sum(self._pi)/n (np.sum pairwise-accumulates for
-            # n >= 8, which can differ in the last ulp)
-            pi_h = sum(pi_v[v].tolist()) / n
-            nu_h = sum(nu_v[v].tolist()) / n
-            # (r0*, r1*) depends on the pattern only through its popcount
-            r_by_nx = [hocs_fna(nx, n, pi_h, nu_h, miss_penalty)
-                       for nx in range(n + 1)]
-            for p in range(k):
-                pos = pos_by_p[p]
-                r0, r1 = r_by_nx[len(pos)]
-                m = 0
-                for j in pos[:r1] + neg_by_p[p][:r0]:
-                    m |= 1 << j
-                sel[v * k + p] = m
-        return sel
-    if sim.alg is ds_pgm:      # the batched JAX path (float64 — bit-exact)
-        from repro.core.batched import selection_tables
-        pi_mat, nu_mat = pi_v, nu_v
-        # pad V to a power-of-two bucket: XLA compiles per shape, and
-        # bucketing makes shapes recur across runs (padding rows are
-        # copies of the last version; their masks are discarded)
-        vpad = 1 << max(4, (v_count - 1).bit_length())
-        if vpad > v_count:
-            pi_mat = np.concatenate(
-                [pi_mat, np.repeat(pi_mat[-1:], vpad - v_count, 0)])
-            nu_mat = np.concatenate(
-                [nu_mat, np.repeat(nu_mat[-1:], vpad - v_count, 0)])
-        mask = selection_tables(costs, pi_mat, nu_mat, miss_penalty,
-                                fno=(cfg.policy == "fno"))
-        return (mask.reshape(-1, n)[:v_count * k] @ pow2).astype(np.int64)
-    if sim.alg is exhaustive and n <= _MAX_EXH_TABLE_CACHES:
-        # batched 2^n-subset enumeration over every (version, pattern) row
-        from repro.core.batched import exhaustive_tables
-        return exhaustive_tables(costs, pi_v, nu_v, miss_penalty,
-                                 fno=(cfg.policy == "fno")).reshape(-1)
-    # generic subroutine: scalar call per (version, pattern)
-    sel = np.empty(v_count * k, dtype=np.int64)
-    for v in range(v_count):
-        pi, nu = pi_v[v], nu_v[v]
-        for p in range(k):
-            if cfg.policy == "fno":
-                pos = [j for j in range(n) if (p >> j) & 1]
-                chosen = []
-                if pos:
-                    sub = sim.alg([costs[j] for j in pos],
-                                  [float(pi[j]) for j in pos], miss_penalty)
-                    chosen = [pos[t] for t in sub]
-            else:
-                rhos = [float(pi[j]) if (p >> j) & 1 else float(nu[j])
-                        for j in range(n)]
-                chosen = sim.alg(costs, rhos, miss_penalty)
-            m = 0
-            for j in chosen:
-                m |= 1 << j
-            sel[v * k + p] = m
-    return sel
 
 
 def accumulate_replay(res: SimResult, st: SystemTrace, selm: np.ndarray,
@@ -168,19 +94,13 @@ def accumulate_replay(res: SimResult, st: SystemTrace, selm: np.ndarray,
 
 def run_fast(sim: Simulator, trace: np.ndarray, res: SimResult,
              system: Optional[SystemTrace] = None) -> SimResult:
-    cfg = sim.cfg
-    n = cfg.n_caches
-    if n > _MAX_TABLE_CACHES:
+    from repro.cachesim.engine import plan_for
+    plan = plan_for(sim.cfg)
+    if plan is None:
+        # outside every provider's budget (n beyond the table limits):
+        # the reference loop is the better deal
         return sim._run_reference(trace, res)
-    if cfg.policy == "fna_cal" and sim.alg is exhaustive and \
-            n > _MAX_EXH_TABLE_CACHES:
-        # the segmented replay's verification pass needs the batched
-        # subset enumeration; past its budget the reference loop wins
-        return sim._run_reference(trace, res)
-    costs = list(cfg.costs)
-    M = cfg.miss_penalty
-    N = int(trace.shape[0])
-    if N == 0:
+    if trace.shape[0] == 0:
         return res
 
     # --- phase 1: the shared system sweep (or a reused artifact) --------
@@ -189,34 +109,7 @@ def run_fast(sim: Simulator, trace: np.ndarray, res: SimResult,
     else:
         system.install(sim, trace)
     sim.last_system = system
-    st = system
-    st.add_quality(res)
+    system.add_quality(res)
 
-    if cfg.policy == "fna_cal":
-        from repro.cachesim.fna_cal_fast import replay_fna_cal
-        return replay_fna_cal(sim, st, res)
-
-    if cfg.policy == "pi":
-        # PI accesses the cheapest cache truly holding x; hash placement
-        # means only the designated cache can — so it IS the selection
-        cost_arr = np.where(st.in_dj,
-                            np.asarray(costs, np.float64)[st.dj_all], M)
-        hits = int(np.count_nonzero(st.in_dj))
-        posm = ((st.pats >> st.dj_all) & 1).astype(bool) & st.in_dj
-        pos_acc = int(np.count_nonzero(posm))
-        total_cost = res.total_cost
-        for c in cost_arr.tolist():
-            total_cost += c
-        res.total_cost = total_cost
-        res.hits += hits
-        res.pos_accesses += pos_acc
-        res.neg_accesses += hits - pos_acc
-        res.n_requests += N
-        return res
-
-    # --- phase 2: every (version, pattern) selection in one batch -------
-    k = 1 << n
-    selmask = _selection_masks(sim, st.pi_v, st.nu_v, costs, M)  # [V * 2^n]
-    # --- phase 3: vectorised replay -------------------------------------
-    selm = selmask[st.ver_per_req * k + st.pats]                 # [N]
-    return accumulate_replay(res, st, selm, costs, M)
+    # --- phases 2-3: the decision plan ----------------------------------
+    return plan.replay(sim, system, res)

@@ -20,9 +20,12 @@ The engine speculates and commits:
      correct — it is a guess whose quality only affects speed — so in the
      post-warmup regime (every branch past min-obs, model views ignored)
      it is patched one row at a time from verification verdicts instead
-     of being rebuilt; while model views are still blended in, exact
+     of being rebuilt; while model views are still blended in,
      per-view-version tables are rebuilt from the frozen calibration
-     state via scalar DS_PGM.
+     state, the whole (version x pattern) batch in one
+     ``repro.core.batched`` call (``selection_tables`` backend="numpy" /
+     ``exhaustive_tables`` — the same float64 math as the verification
+     pass, so a correct speculation always verifies).
   2. RECONSTRUCT the exact calibration-state trajectory the speculated
      probes imply: probe counts are integer cumsums; EWMA paths advance
      per (cache, branch) through :func:`repro.core.estimator.ewma_path` —
@@ -178,23 +181,27 @@ def replay_fna_cal(sim, st: SystemTrace, res):
         return end, base
 
     def build_tables(vids) -> dict:
-        """Scalar-exact 2^n tables from the frozen calibration state, one
-        per view version."""
+        """2^n speculation tables from the frozen calibration state, one
+        per view version — the whole (version x pattern) batch produced
+        by ONE ``repro.core.batched`` call (``selection_tables`` /
+        ``exhaustive_tables``) instead of 2^n scalar ``mask_fn`` calls
+        per version.  The batched float64 rows match ``verify_fn``'s math
+        exactly, so speculation quality only improves; exactness is still
+        owned by the verification pass and the scalar bridge."""
+        from repro.core.batched import exhaustive_tables, selection_tables
         use_pi = pi_obs >= min_obs
         use_nu = nu_obs >= min_obs
-        tables = {}
-        for v in vids:
-            rp = np.where(use_pi | uninf_v[v], pi_emp, st.pi_v[v])
-            rn = np.where(use_nu | uninf_v[v], nu_emp, st.nu_v[v])
-            rp_l = rp.tolist()
-            rn_l = rn.tolist()
-            tab = np.empty(k, np.int64)
-            for p in range(k):
-                rhos = [rp_l[j] if (p >> j) & 1 else rn_l[j]
-                        for j in range(n)]
-                tab[p] = mask_fn(costs, rhos, M)
-            tables[v] = tab
-        return tables
+        vids = [int(v) for v in vids]
+        rp = np.where(use_pi[None, :] | uninf_v[vids],
+                      pi_emp[None, :], st.pi_v[vids])          # [m, n]
+        rn = np.where(use_nu[None, :] | uninf_v[vids],
+                      nu_emp[None, :], st.nu_v[vids])
+        if cfg.alg == "exhaustive":
+            flat = exhaustive_tables(costs, rp, rn, M).reshape(-1)
+        else:
+            tab = selection_tables(costs, rp, rn, M, backend="numpy")
+            flat = (tab.reshape(-1, n) @ pow2).astype(np.int64)
+        return {v: flat[i * k:(i + 1) * k] for i, v in enumerate(vids)}
 
     s = 0
     window = _START_WINDOW

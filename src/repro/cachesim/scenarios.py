@@ -40,6 +40,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.cachesim.simulator import SimConfig
 from repro.cachesim.sweep import (
+    axis_column,
     cell_label,
     cell_overrides,
     hashable_label,
@@ -159,9 +160,10 @@ def run_scenario(sc: Scenario, n_requests: Optional[int] = None,
     # artifacts stay self-describing
     extra = {cell_label(sc.axis, v): cell_overrides(sc.axis, v)
              for v in values if isinstance(v, Mapping)}
+    col = axis_column(sc.axis)
     for rec in records:
         rec["scenario"] = sc.name
-        for k, v in extra.get(hashable_label(rec[sc.axis]), {}).items():
+        for k, v in extra.get(hashable_label(rec[col]), {}).items():
             rec.setdefault(k, v)
     return records
 
@@ -206,6 +208,23 @@ _scenario(
     base=dict(cache_size=2_000, update_interval=200),
     golden_traces=("gradle", "f2"),
     golden_values=(50.0, 500.0),
+)
+
+_scenario(
+    name="fig3_penalty_shared",
+    figure="fig3",
+    description="Fig. 3's miss-penalty axis as a DECISION-SIDE grid "
+                "(8 cells x all four workloads): every cell leaves "
+                "SystemTrace.system_key unchanged, so the sweep runner "
+                "computes ONE system sweep per trace and replays all "
+                "penalty cells against it, ds_pgm tables stacked into a "
+                "single batched call.",
+    traces=("wiki", "gradle", "scarab", "f2"),
+    axis="miss_penalty",
+    values=(25.0, 50.0, 75.0, 100.0, 150.0, 250.0, 500.0, 1000.0),
+    base=dict(cache_size=2_000, update_interval=200),
+    golden_traces=("wiki", "scarab"),
+    golden_values=(25.0, 1000.0),
 )
 
 _scenario(
@@ -369,7 +388,7 @@ _scenario(
 #: each (including fna_cal everywhere and the exhaustive subroutine via
 #: ``exhaustive_small``) is asserted bit-exact fast-vs-reference
 GOLDEN_SCENARIOS = (
-    "fig3_penalty", "fig4_gradle", "fig4_wiki", "fig7_num_caches",
-    "hetero_tiers", "staggered_adverts", "delayed_view",
+    "fig3_penalty", "fig3_penalty_shared", "fig4_gradle", "fig4_wiki",
+    "fig7_num_caches", "hetero_tiers", "staggered_adverts", "delayed_view",
     "exhaustive_small", "heavy_skew",
 )

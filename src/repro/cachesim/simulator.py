@@ -441,17 +441,10 @@ def run_policies(trace: np.ndarray, base: SimConfig,
     cache dynamics are identical by construction).
 
     On the fast engine the policy-independent system sweep is computed
-    exactly once: the first fast run's
-    :class:`~repro.cachesim.systemstate.SystemTrace` is handed to every
-    subsequent policy, which then only pays its table/replay phase.  Pass
+    exactly once and every policy only pays its decision-plan/replay
+    phase (the single-cell case of
+    :func:`repro.cachesim.engine.run_cells`; the sweep runner extends the
+    same sharing across decision-side grid cells).  Pass
     ``share_system=False`` to force per-policy full runs (benchmarking)."""
-    import dataclasses
-    out = {}
-    system = None
-    for p in policies:
-        cfg = dataclasses.replace(base, policy=p)
-        sim = Simulator(cfg)
-        out[p] = sim.run(trace, system=system)
-        if share_system and system is None:
-            system = getattr(sim, "last_system", None)
-    return out
+    from repro.cachesim.engine import run_cells
+    return run_cells(trace, [base], policies, share_system=share_system)[0]

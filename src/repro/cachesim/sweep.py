@@ -22,12 +22,21 @@ is one of:
     ``cache_size``; Fig. 7 resizes the homogeneous cost vector with
     ``n_caches``).
 
-Swept fields are SYSTEM configuration whenever they change the
-indicators or cache dynamics (``update_interval``, ``bpe``,
-``cache_size``, ``n_caches``, ...), so cells never share sweeps with
-each other — only policies within a cell do.  Decision-side axes
-(``miss_penalty``, ``costs``) would in principle allow cross-cell
-sharing too; ``run_grid`` does not exploit that today.
+Swept fields split into two kinds, classified per cell by
+``SystemTrace.system_key``:
+
+  * SYSTEM-side axes change the indicators or cache dynamics
+    (``update_interval``, ``bpe``, ``cache_size``, ``n_caches``, ...):
+    every cell is its own system evolution, so cells never share sweeps
+    with each other — only policies within a cell do.
+  * DECISION-side axes leave the system evolution untouched
+    (``miss_penalty``, ``costs``, ``policy``, the calibration knobs):
+    all their cells land in one group that computes a SINGLE
+    :class:`~repro.cachesim.systemstate.SystemTrace` per trace and
+    replays every (cell, policy) against it, with the ds_pgm family's
+    decision tables stacked into one batched call
+    (:func:`repro.cachesim.engine.run_cells`).  The paper's Fig. 3
+    penalty grid thus costs one sweep per trace instead of one per cell.
 
 :func:`run_sweep` is the ``update_interval`` special case (Figs. 4-6),
 kept as the stable entry point for benchmarks and tests.
@@ -39,7 +48,8 @@ from typing import Dict, List, Mapping, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.cachesim.simulator import SimConfig, SimResult, run_policies
+from repro.cachesim.simulator import SimConfig, SimResult
+from repro.cachesim.systemstate import SystemTrace
 from repro.cachesim.traces import get_trace
 
 DEFAULT_POLICIES = ("fna", "fna_cal", "fno", "pi")
@@ -94,21 +104,36 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
     at ``n_requests`` with ``base.seed``.  ``share_system=False`` forces
     per-policy full runs (benchmarking the amortisation itself).
     """
+    from repro.cachesim.engine import run_cells
     if not isinstance(traces, Mapping):
         traces = {name: get_trace(name, n_requests, seed=base.seed)
                   for name in traces}
     out: Dict[CellKey, Dict[str, SimResult]] = {}
     for name, trace in traces.items():
+        # classify cells by the policy-independent system key: cells of a
+        # decision-side axis all share one key (and thus ONE SystemTrace
+        # per trace); system-side cells each form their own group
+        order: List[CellKey] = []
+        groups: Dict[tuple, List[Tuple[CellKey, SimConfig]]] = {}
         for value in values:
             key = (name, cell_label(axis, value))
-            if key in out:
+            if key in order:
                 raise ValueError(
                     f"duplicate grid cell {key!r}: two axis values share "
                     f"the label {key[1]!r} — give mapping cells distinct "
                     f"{axis!r} entries (or sweep a different axis)")
+            order.append(key)
             cfg = dataclasses.replace(base, **cell_overrides(axis, value))
-            out[key] = run_policies(
-                trace, cfg, policies=policies, share_system=share_system)
+            groups.setdefault(SystemTrace.system_key(cfg),
+                              []).append((key, cfg))
+        results: Dict[CellKey, Dict[str, SimResult]] = {}
+        for cells in groups.values():
+            group_out = run_cells(trace, [cfg for _, cfg in cells],
+                                  policies, share_system=share_system)
+            for (key, _), cell_res in zip(cells, group_out):
+                results[key] = cell_res
+        for key in order:       # keep the caller's cell order
+            out[key] = results[key]
     return out
 
 
@@ -127,15 +152,31 @@ def run_sweep(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
                     share_system=share_system)
 
 
+#: record keys an axis label may never shadow: the per-policy result
+#: fields every record carries, plus the trace column
+_RESERVED_RECORD_KEYS = frozenset(SimResult(policy="").to_dict()) | {"trace"}
+
+
+def axis_column(axis: str) -> str:
+    """The record column an axis is flattened under.  An axis whose name
+    collides with a :meth:`SimResult.to_dict` field (e.g. a future
+    ``n_requests`` axis vs the ``n`` request counter's sibling fields) or
+    with ``trace`` would be silently overwritten by the result dict —
+    those are prefixed ``axis_<name>`` instead."""
+    return axis if axis not in _RESERVED_RECORD_KEYS else f"axis_{axis}"
+
+
 def sweep_records(grid: Dict[CellKey, Dict[str, SimResult]],
                   axis: str = "update_interval") -> List[dict]:
     """Flatten a :func:`run_grid`/:func:`run_sweep` grid into one record
     per (trace, cell, policy) — ready for CSV/JSON dumps or plotting.
-    Per-cache tuple labels serialise as lists in JSON."""
+    Per-cache tuple labels serialise as lists in JSON; the axis lands in
+    column :func:`axis_column` (prefixed on a result-field collision)."""
+    col = axis_column(axis)
     records = []
     for (name, label), cell in grid.items():
         for policy, res in cell.items():
-            rec = {"trace": name, axis: label}
+            rec = {"trace": name, col: label}
             rec.update(res.to_dict())
             records.append(rec)
     return records

@@ -33,7 +33,7 @@ it to prove a multi-policy run performed exactly one sweep.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
 import numpy as np
@@ -252,6 +252,11 @@ class SystemTrace:
     final_state: dict           # end-of-run system state snapshot
     from_fresh: bool
     _trace: np.ndarray          # held only for identity checks on install
+    # decision tables memoised per decision-side configuration (costs,
+    # miss penalty, CS_FNO flag) — written by the table plans of
+    # ``repro.cachesim.engine`` and by the sweep runner's stacked
+    # cross-cell prefetch, read back at replay time
+    plan_cache: Dict[tuple, np.ndarray] = field(default_factory=dict)
 
     # -- construction ------------------------------------------------------
 

@@ -47,17 +47,25 @@ def rho_matrix(indications, q, fp, fn) -> jax.Array:
 def ds_pgm_batched(costs, rhos, miss_penalty, *, fno_mask=None) -> jax.Array:
     """Batched DS_PGM prefix evaluation.
 
-    costs: [N]; rhos: [B,N]; optional fno_mask [B,N] (1 = cache may be
-    accessed; CS_FNO passes the positive-indication mask, CS_FNA all-ones).
-    Returns a selection mask [B,N] (bool).
+    costs: [N] shared, or [B,N] per row (a stacked batch of decision
+    cells); rhos: [B,N]; miss_penalty: scalar, or [B] per row; optional
+    fno_mask [B,N] (1 = cache may be accessed; CS_FNO passes the
+    positive-indication mask, CS_FNA all-ones).  Every operation is
+    row-local, so a row's mask is independent of what else shares the
+    batch — the decision-plan engine relies on this to stack whole sweep
+    cells into one call.  Returns a selection mask [B,N] (bool).
     """
     b, n = rhos.shape
     r = jnp.clip(rhos, EPS, 1.0 - EPS)
-    key = costs[None, :] / -jnp.log(r)                      # [B,N]
+    costs = jnp.asarray(costs)
+    costs_b = jnp.broadcast_to(costs, (b, n)) if costs.ndim == 1 else costs
+    m = jnp.asarray(miss_penalty)
+    m_b = jnp.broadcast_to(m, (b,)) if m.ndim == 0 else m
+    key = costs_b / -jnp.log(r)                             # [B,N]
     if fno_mask is not None:
         key = jnp.where(fno_mask > 0, key, jnp.inf)         # excluded -> last
     order = jnp.argsort(key, axis=1)                        # ascending
-    c_sorted = jnp.take_along_axis(jnp.broadcast_to(costs[None], (b, n)), order, 1)
+    c_sorted = jnp.take_along_axis(costs_b, order, 1)
     r_sorted = jnp.take_along_axis(r, order, 1)
     if fno_mask is not None:
         allowed = jnp.take_along_axis(fno_mask > 0, order, 1)
@@ -67,8 +75,8 @@ def ds_pgm_batched(costs, rhos, miss_penalty, *, fno_mask=None) -> jax.Array:
     lprod = jnp.cumsum(jnp.log(r_sorted), axis=1)
     # prefix costs phi(P_i), i = 0..n (0 = empty set)
     phi = jnp.concatenate(
-        [jnp.full((b, 1), miss_penalty, csum.dtype),
-         csum + miss_penalty * jnp.exp(lprod)], axis=1)     # [B, N+1]
+        [m_b[:, None].astype(csum.dtype),
+         csum + m_b[:, None] * jnp.exp(lprod)], axis=1)     # [B, N+1]
     best = jnp.argmin(phi, axis=1)                          # prefix length
     pick_sorted = jnp.arange(n)[None, :] < best[:, None]    # [B,N] in sorted order
     # scatter back to cache order
@@ -77,7 +85,8 @@ def ds_pgm_batched(costs, rhos, miss_penalty, *, fno_mask=None) -> jax.Array:
     return mask
 
 
-def selection_tables(costs, pi, nu, miss_penalty, *, fno: bool = False) -> np.ndarray:
+def selection_tables(costs, pi, nu, miss_penalty, *, fno: bool = False,
+                     backend: str = "jax") -> np.ndarray:
     """[V, 2^n, n] DS_PGM decision tables over ALL indication patterns for
     a whole batch of V view versions at once.
 
@@ -92,6 +101,12 @@ def selection_tables(costs, pi, nu, miss_penalty, *, fno: bool = False) -> np.nd
     scalar EPS dead-band (~1e-12): this path evaluates the Eq. (10)
     product as exp(cumsum(log .)) and takes a plain argmin; see the
     parity caveat in ``repro.cachesim.fastpath``.
+
+    ``backend="numpy"`` routes through :func:`rho_selection_tables` — the
+    float64 NumPy mirror of :func:`ds_pgm_batched` — which skips the JAX
+    dispatch overhead entirely; the calibrated fast engine uses it for
+    its many small per-segment table builds.  (No CS_FNO support there:
+    the segmented replay never needs it.)
     """
     pi = np.atleast_2d(np.asarray(pi, np.float64))
     nu = np.atleast_2d(np.asarray(nu, np.float64))
@@ -100,6 +115,10 @@ def selection_tables(costs, pi, nu, miss_penalty, *, fno: bool = False) -> np.nd
     pat_bits = (np.arange(k)[:, None] >> np.arange(n)[None, :]) & 1   # [K,n]
     rhos = np.where(pat_bits[None, :, :] > 0,
                     pi[:, None, :], nu[:, None, :]).reshape(v * k, n)
+    if backend == "numpy":
+        if fno:
+            raise ValueError("backend='numpy' does not support fno=True")
+        return rho_selection_tables(costs, rhos, miss_penalty).reshape(v, k, n)
     with enable_x64():
         mask = ds_pgm_batched(
             jnp.asarray(np.asarray(costs, np.float64)),
@@ -107,6 +126,55 @@ def selection_tables(costs, pi, nu, miss_penalty, *, fno: bool = False) -> np.nd
             fno_mask=jnp.asarray(np.tile(pat_bits, (v, 1))) if fno else None)
         out = np.asarray(mask)
     return out.reshape(v, k, n)
+
+
+def selection_tables_cells(costs_cells, pi, nu, penalties, fno_cells,
+                           *, max_rows: int = 1 << 20) -> np.ndarray:
+    """[C, V, 2^n, n] DS_PGM decision tables for SEVERAL decision cells
+    against ONE shared view history, in as few batched calls as memory
+    allows.
+
+    A decision-side sweep axis (miss penalty, access-cost vector, policy)
+    leaves the system evolution — and with it the whole [V, n] (pi, nu)
+    view history — untouched, so the only thing that varies across its
+    cells is the (costs, miss_penalty, CS_FNO) triple each row is
+    evaluated under.  This stacks all C cells' (version x pattern) grids
+    into one ``ds_pgm_batched`` evaluation with per-row costs/penalties
+    (chunked to ``max_rows`` rows so the [rows, n] matrices stay
+    bounded).  Rows are evaluated independently, so cell c's slice is
+    bit-identical to a per-cell :func:`selection_tables` call.
+
+    ``costs_cells``: [C, n]; ``penalties``: [C]; ``fno_cells``: [C] bool.
+    """
+    pi = np.atleast_2d(np.asarray(pi, np.float64))
+    nu = np.atleast_2d(np.asarray(nu, np.float64))
+    v, n = pi.shape
+    k = 1 << n
+    costs_cells = np.asarray(costs_cells, np.float64)
+    penalties = np.asarray(penalties, np.float64)
+    fno_cells = np.asarray(fno_cells, bool)
+    c = costs_cells.shape[0]
+    pat_bits = (np.arange(k)[:, None] >> np.arange(n)[None, :]) & 1   # [K,n]
+    rhos = np.where(pat_bits[None, :, :] > 0,
+                    pi[:, None, :], nu[:, None, :]).reshape(v * k, n)
+    pat_tiled = np.tile(pat_bits, (v, 1))                             # [V*K,n]
+    ones = np.ones_like(pat_tiled)
+    out = np.empty((c, v * k, n), dtype=bool)
+    per_call = max(1, max_rows // (v * k))        # whole cells per chunk
+    with enable_x64():
+        for lo in range(0, c, per_call):
+            hi = min(lo + per_call, c)
+            cc = hi - lo
+            rows = np.tile(rhos, (cc, 1))
+            costs_rows = np.repeat(costs_cells[lo:hi], v * k, axis=0)
+            m_rows = np.repeat(penalties[lo:hi], v * k)
+            fno_rows = np.concatenate(
+                [pat_tiled if f else ones for f in fno_cells[lo:hi]])
+            mask = ds_pgm_batched(
+                jnp.asarray(costs_rows), jnp.asarray(rows),
+                jnp.asarray(m_rows), fno_mask=jnp.asarray(fno_rows))
+            out[lo:hi] = np.asarray(mask).reshape(cc, v * k, n)
+    return out.reshape(c, v, k, n)
 
 
 def rho_selection_tables(costs, rhos, miss_penalty) -> np.ndarray:
@@ -247,30 +315,111 @@ def cs_fno_batched(indications, costs, q, fp, fn, miss_penalty) -> jax.Array:
     return ds_pgm_batched(costs, rhos, miss_penalty, fno_mask=indications)
 
 
-def hocs_fna_batched(n_x, n, pi, nu, miss_penalty) -> Tuple[jax.Array, jax.Array]:
+def _argmin_geometric_batched(m_eff, rho, r_max) -> np.ndarray:
+    """Vectorised float64 mirror of the scalar
+    :func:`repro.core.policies._argmin_geometric`: same edge-case
+    branches, same {0, 1, floor(r*), ceil(r*), r_max} candidate
+    shortlist scanned in ascending order with the same EPS
+    strict-improvement dead-band.  All inputs broadcast to [B]."""
+    m_eff, rho, r_max = np.broadcast_arrays(
+        np.asarray(m_eff, np.float64), np.asarray(rho, np.float64),
+        np.asarray(r_max, np.int64))
+    out = np.zeros(m_eff.shape, np.int64)
+    pos = r_max > 0
+    tiny = pos & (rho <= EPS)
+    out[tiny & (m_eff > 1.0)] = 1
+    mid = pos & (rho > EPS) & (rho < 1.0 - EPS)
+    if not mid.any():
+        return out
+    m = m_eff[mid]
+    r = rho[mid]
+    rmax = r_max[mid]
+    # continuous optimum: r* = ln(m_eff * ln(1/rho)) / ln(1/rho)
+    l = np.log(1.0 / r)
+    r_cont = np.log(np.maximum(m * l, EPS)) / l
+    cand = np.stack([np.zeros_like(r_cont), np.ones_like(r_cont),
+                     np.floor(r_cont), np.ceil(r_cont),
+                     rmax.astype(np.float64)], axis=1)
+    cand = np.sort(cand, axis=1)          # the scalar's ascending scan
+    ok = (cand >= 0.0) & (cand <= rmax[:, None].astype(np.float64))
+    val = cand + m[:, None] * r[:, None] ** cand
+    best_r = np.zeros(m.shape, np.float64)
+    best_v = m.copy()                     # r = 0 baseline
+    for s in range(cand.shape[1]):        # duplicates can't strictly improve
+        imp = ok[:, s] & (val[:, s] < best_v - EPS)
+        best_r = np.where(imp, cand[:, s], best_r)
+        best_v = np.where(imp, val[:, s], best_v)
+    out[mid] = best_r.astype(np.int64)
+    return out
+
+
+def hocs_fna_batched(n_x, n, pi, nu, miss_penalty
+                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Algorithm 1, batched over requests (homogeneous parameters).
 
-    n_x: [B] positive-indication counts.  Returns (r0, r1) int32 [B].
-    """
-    def argmin_geo(m_eff, rho, r_max):
-        rho_c = jnp.clip(rho, EPS, 1.0 - EPS)
-        l = jnp.log(1.0 / rho_c)
-        r_cont = jnp.log(jnp.maximum(m_eff * l, EPS)) / l
-        cands = jnp.stack([
-            jnp.zeros_like(r_cont), jnp.ones_like(r_cont),
-            jnp.floor(r_cont), jnp.ceil(r_cont),
-            r_max.astype(r_cont.dtype)], axis=-1)
-        cands = jnp.clip(cands, 0, r_max[..., None].astype(r_cont.dtype))
-        vals = cands + m_eff[..., None] * rho_c[..., None] ** cands
-        take = jnp.argmin(vals, axis=-1)
-        return jnp.take_along_axis(cands, take[..., None], -1)[..., 0].astype(jnp.int32)
+    The float64 NumPy mirror of the scalar :func:`repro.core.hocs_fna` —
+    same candidate shortlist and EPS dead-band via
+    :func:`_argmin_geometric_batched` — so the simulator fast engine can
+    evaluate a whole (view version x positive-count) grid in one call
+    and stay bit-exact with the reference loop (the same near-tie caveat
+    as :func:`selection_tables`: a candidate shortlist can only differ
+    when the continuous optimum sits within ~1 ulp of an integer).
 
-    b = n_x.shape[0]
-    m_arr = jnp.full((b,), miss_penalty, jnp.float32)
-    r1 = argmin_geo(m_arr, jnp.full((b,), pi, jnp.float32), n_x)
-    residual = miss_penalty * jnp.float32(pi) ** r1
-    r0 = jnp.where(
-        residual > 1.0,
-        argmin_geo(residual, jnp.full((b,), nu, jnp.float32), n - n_x),
-        0)
-    return r0.astype(jnp.int32), r1
+    ``n_x``: [B] positive-indication counts; ``pi``/``nu``/
+    ``miss_penalty``: scalars or [B].  Returns (r0, r1) int64 [B].
+    """
+    n_x = np.asarray(n_x, np.int64)
+    pi, nu, m, n_x = np.broadcast_arrays(
+        np.asarray(pi, np.float64), np.asarray(nu, np.float64),
+        np.asarray(miss_penalty, np.float64), n_x)
+    r1 = _argmin_geometric_batched(m, pi, n_x)
+    residual = m * pi ** r1
+    r0 = np.where(residual > 1.0,
+                  _argmin_geometric_batched(residual, nu, n - n_x), 0)
+    return r0.astype(np.int64), r1
+
+
+def hocs_selection_tables(pi_v, nu_v, miss_penalty) -> np.ndarray:
+    """[V, 2^n] int64 HOCS selection bitmasks over ALL indication
+    patterns for a batch of V view versions.
+
+    Mirrors the reference loop exactly: per-version pooled estimates are
+    LEFT-TO-RIGHT sums over caches (np.sum pairwise-accumulates for
+    n >= 8, which can differ in the last ulp), the (r0*, r1*) grid is one
+    :func:`hocs_fna_batched` call over every (version, popcount) pair,
+    and row (v, p) accesses the r1* cheapest positive-indication caches
+    plus the r0* cheapest negative ones (ascending cache index — the
+    homogeneous setting has no cost order).
+    """
+    pi_v = np.atleast_2d(np.asarray(pi_v, np.float64))
+    nu_v = np.atleast_2d(np.asarray(nu_v, np.float64))
+    v, n = pi_v.shape
+    k = 1 << n
+    acc_pi = np.zeros(v, np.float64)
+    acc_nu = np.zeros(v, np.float64)
+    for j in range(n):                    # left-to-right, like sum(list)
+        acc_pi = acc_pi + pi_v[:, j]
+        acc_nu = acc_nu + nu_v[:, j]
+    pi_h = acc_pi / n
+    nu_h = acc_nu / n
+    # (r0*, r1*) depends on the pattern only through its popcount
+    nx = np.arange(n + 1, dtype=np.int64)
+    r0g, r1g = hocs_fna_batched(
+        np.tile(nx, v), n, np.repeat(pi_h, n + 1), np.repeat(nu_h, n + 1),
+        float(miss_penalty))
+    r0g = r0g.reshape(v, n + 1)
+    r1g = r1g.reshape(v, n + 1)
+    bits = ((np.arange(k)[:, None] >> np.arange(n)[None, :]) & 1
+            ).astype(np.int64)                                    # [K, n]
+    pow2 = (1 << np.arange(n)).astype(np.int64)
+    rank_pos = np.cumsum(bits, axis=1)      # 1-based rank among set bits
+    rank_neg = np.cumsum(1 - bits, axis=1)
+    # low_set[p, r] = mask of the r lowest-index positive caches of p
+    low_set = np.stack([(bits * (rank_pos <= r)) @ pow2
+                        for r in range(n + 1)], axis=1)           # [K, n+1]
+    low_clr = np.stack([((1 - bits) * (rank_neg <= r)) @ pow2
+                        for r in range(n + 1)], axis=1)
+    popc = bits.sum(axis=1)                                       # [K]
+    rows = np.arange(k)[None, :]
+    sel = low_set[rows, r1g[:, popc]] | low_clr[rows, r0g[:, popc]]
+    return sel.astype(np.int64)

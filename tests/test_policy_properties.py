@@ -22,14 +22,31 @@ instances (n <= 6) rather than fixed fixtures:
 The bitmask twins (``ds_pgm_mask`` / ``exhaustive_mask``) are asserted
 decision-identical to their list-returning originals on the same draws —
 they are the scalar inner loop of the calibrated fast engine.
+
+The module also carries the decision-plan layer's provider parity
+properties: the exact batched HOCS mirror
+(``repro.core.batched.hocs_fna_batched`` / ``hocs_selection_tables``)
+against the scalar Algorithm-1 version loop it replaced, and the
+calibrated engine's batched bridge tables (``selection_tables``
+backend="numpy" / ``exhaustive_tables``) against per-pattern scalar
+``mask_fn`` rows, across random (costs, rhos, M).  Seeded-random
+backstops that run without hypothesis live in
+``tests/test_engine_providers.py``.
 """
 import math
 
+import numpy as np
 import pytest
 
 hyp = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core.batched import (  # noqa: E402
+    exhaustive_tables,
+    hocs_fna_batched,
+    hocs_selection_tables,
+    selection_tables,
+)
 from repro.core.model import EPS, CacheView, service_cost  # noqa: E402
 from repro.core.policies import (  # noqa: E402
     cs_fna,
@@ -38,6 +55,7 @@ from repro.core.policies import (  # noqa: E402
     ds_pgm_mask,
     exhaustive,
     exhaustive_mask,
+    hocs_fna,
 )
 
 MAX_N = 6
@@ -117,6 +135,170 @@ def zero_fn_views(draw):
     inds = [draw(st.booleans()) for _ in range(n)]
     M = draw(st.floats(1.5, 1_000.0, allow_nan=False, allow_infinity=False))
     return views, inds, M
+
+
+# ---------------------------------------------------------------------------
+# Decision-plan providers: batched builders == the scalar loops they
+# replaced (the fast engine's table layer, see repro.cachesim.engine)
+#
+# The batched builders carry the engine's documented near-tie caveat
+# (float64 argmin / 1-ulp log differences vs the scalar EPS dead-band).
+# Data-derived estimates never land in that measure-zero region, but
+# hypothesis hunts for it with exact "nice" fractions — so each draw
+# ASSUMEs away instances whose decision margin is inside the caveat
+# (< 1e-9), and asserts EXACT parity on everything else.
+# ---------------------------------------------------------------------------
+
+def _geo_boundary_safe(m_eff: float, rho: float) -> bool:
+    """The _argmin_geometric candidate shortlist {0, 1, floor(r*),
+    ceil(r*), r_max} is log-derived; a continuous optimum within 1e-6 of
+    an integer could flip floor/ceil under a 1-ulp log difference."""
+    if rho <= EPS or rho >= 1.0 - EPS:
+        return True                    # branch uses exact comparisons only
+    l = math.log(1.0 / rho)
+    r_cont = math.log(max(m_eff * l, EPS)) / l
+    return abs(r_cont - round(r_cont)) > 1e-6
+
+
+def _hocs_instance_safe(n: int, pi: float, nu: float, M: float) -> bool:
+    if not _geo_boundary_safe(M, pi):
+        return False
+    for x in range(n + 1):
+        r1 = hocs_fna(x, n, pi, nu, M)[1]
+        residual = M * pi ** r1
+        if residual > 1.0 and not _geo_boundary_safe(residual, nu):
+            return False
+    return True
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(1, 9), rhos_st, rhos_st,
+       st.floats(1.5, 1_000.0, allow_nan=False, allow_infinity=False))
+def test_hocs_fna_batched_matches_scalar_version_loop(n, pi, nu, M):
+    """The float64 NumPy mirror reproduces the scalar Algorithm 1
+    EXACTLY over every positive-indication count — it is the fast
+    engine's HOCS table builder, so near-enough is not enough."""
+    hyp.assume(_hocs_instance_safe(n, pi, nu, M))
+    nx = np.arange(n + 1, dtype=np.int64)
+    r0b, r1b = hocs_fna_batched(nx, n, pi, nu, M)
+    for x in range(n + 1):
+        assert (int(r0b[x]), int(r1b[x])) == hocs_fna(x, n, pi, nu, M), \
+            (n, pi, nu, M, x)
+
+
+@st.composite
+def view_histories(draw, max_n=5, max_v=4):
+    n = draw(st.integers(1, max_n))
+    v = draw(st.integers(1, max_v))
+    rows = st.lists(rhos_st, min_size=n, max_size=n)
+    pi_v = draw(st.lists(rows, min_size=v, max_size=v))
+    nu_v = draw(st.lists(rows, min_size=v, max_size=v))
+    M = draw(st.floats(1.5, 1_000.0, allow_nan=False, allow_infinity=False))
+    return np.asarray(pi_v), np.asarray(nu_v), M
+
+
+@settings(max_examples=150, deadline=None)
+@given(view_histories())
+def test_hocs_selection_tables_match_scalar_version_loop(case):
+    """Row (v, p) of the batched HOCS build == the scalar version loop
+    the fast engine used to run: left-to-right pooled means,
+    per-popcount (r0*, r1*), then the r1* cheapest positive plus r0*
+    cheapest negative caches."""
+    pi_v, nu_v, M = case
+    v, n = pi_v.shape
+    for vi in range(v):
+        hyp.assume(_hocs_instance_safe(
+            n, sum(pi_v[vi].tolist()) / n, sum(nu_v[vi].tolist()) / n, M))
+    tab = hocs_selection_tables(pi_v, nu_v, M)
+    for vi in range(v):
+        pi_h = sum(pi_v[vi].tolist()) / n
+        nu_h = sum(nu_v[vi].tolist()) / n
+        r_by_nx = [hocs_fna(x, n, pi_h, nu_h, M) for x in range(n + 1)]
+        for p in range(1 << n):
+            pos = [j for j in range(n) if (p >> j) & 1]
+            neg = [j for j in range(n) if not (p >> j) & 1]
+            r0, r1 = r_by_nx[len(pos)]
+            want = 0
+            for j in pos[:r1] + neg[:r0]:
+                want |= 1 << j
+            assert tab[vi, p] == want, (vi, p)
+
+
+def _clip(r: float) -> float:
+    return min(max(r, EPS), 1.0 - EPS)
+
+
+def _ds_pgm_row_safe(costs, rhos, M) -> bool:
+    """Potential-gain keys separated (order stable under 1-ulp log
+    drift) and a unique Eq. (10) winner by > 1e-9 (outside both the
+    scalar dead-band and the batched evaluation error)."""
+    n = len(costs)
+    keys = sorted(costs[j] / -math.log(_clip(rhos[j])) for j in range(n))
+    for a, b in zip(keys, keys[1:]):
+        if 0.0 < b - a <= 1e-9 * max(abs(a), 1.0):
+            return False
+    order = sorted(range(n), key=lambda j: costs[j] / -math.log(_clip(rhos[j])))
+    vals = [M]
+    run_c, run_p = 0.0, 1.0
+    for j in order:
+        run_c += costs[j]
+        run_p *= rhos[j]
+        vals.append(run_c + M * run_p)
+    vals = sorted(vals)
+    return vals[1] - vals[0] > 1e-9
+
+
+def _exhaustive_row_safe(costs, rhos, M) -> bool:
+    """Unique-or-exactly-tied Eq. (10) minimum: subset values are
+    evaluated IEEE-identically by the batched DP, so exact ties resolve
+    to the same lowest mask on both sides; only near-ties inside the
+    dead-band can diverge."""
+    n = len(costs)
+    vals = [M]
+    for mask in range(1, 1 << n):
+        c, p = 0.0, M
+        for j in range(n):
+            if mask >> j & 1:
+                c += costs[j]
+                p *= rhos[j]
+        vals.append(c + p)
+    vals = sorted(vals)
+    gap = vals[1] - vals[0]
+    return gap == 0.0 or gap > 1e-9
+
+
+@st.composite
+def bridge_instances(draw, max_n=4):
+    n = draw(st.integers(1, max_n))
+    cost_st = st.floats(0.05, 5.0, allow_nan=False, allow_infinity=False)
+    costs = draw(st.lists(cost_st, min_size=n, max_size=n))
+    rp = draw(st.lists(rhos_st, min_size=n, max_size=n))
+    rn = draw(st.lists(rhos_st, min_size=n, max_size=n))
+    M = draw(st.floats(1.5, 1_000.0, allow_nan=False, allow_infinity=False))
+    return costs, rp, rn, M
+
+
+@settings(max_examples=300, deadline=None)
+@given(bridge_instances())
+def test_batched_fna_cal_bridge_tables_match_scalar_mask_rows(inst):
+    """The calibrated engine's batched speculation/bridge tables
+    row-match the per-pattern scalar ``mask_fn`` calls they replaced,
+    for both subroutines."""
+    costs, rp, rn, M = inst
+    n = len(costs)
+    rows = []
+    for p in range(1 << n):
+        rhos = [rp[j] if (p >> j) & 1 else rn[j] for j in range(n)]
+        hyp.assume(_ds_pgm_row_safe(costs, rhos, M))
+        hyp.assume(_exhaustive_row_safe(costs, rhos, M))
+        rows.append(rhos)
+    pow2 = (1 << np.arange(n)).astype(np.int64)
+    ds_tab = (selection_tables(costs, [rp], [rn], M, backend="numpy")
+              .reshape(-1, n) @ pow2)
+    ex_tab = exhaustive_tables(costs, [rp], [rn], M).reshape(-1)
+    for p, rhos in enumerate(rows):
+        assert ds_tab[p] == ds_pgm_mask(costs, rhos, M), (p, inst)
+        assert ex_tab[p] == exhaustive_mask(costs, rhos, M), (p, inst)
 
 
 @settings(max_examples=300, deadline=None)
