@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import csv
+import dataclasses
 import json
 import sys
 import time
@@ -280,16 +281,44 @@ def plot_scenario(sc: Scenario, records: Sequence[dict], path: Path) -> bool:
     return True
 
 
+def _rebind_traces(sc: Scenario, trace_file: str,
+                   trace_format: Optional[str],
+                   key_column: Optional[str]) -> Scenario:
+    """Point a scenario at an external log file: its workloads become the
+    single ``file:<path>`` trace (loader kwargs from the CLI flags), the
+    grid/axis/policies stay as declared.  Golden trace pins are dropped —
+    they refer to the declared workloads."""
+    spec = f"file:{trace_file}"
+    kw: Dict[str, object] = {}
+    if trace_format:
+        kw["fmt"] = trace_format
+    if key_column is not None:
+        kw["key_column"] = (int(key_column) if key_column.isdigit()
+                            else key_column)
+    return dataclasses.replace(sc, traces=(spec,), golden_traces=None,
+                               trace_kwargs={spec: kw})
+
+
 def run_scenario_pipeline(name: str, *, smoke: bool = False,
                           full: bool = False,
                           n_requests: Optional[int] = None,
                           out_dir: Path = FIGS_DIR,
                           write_json: bool = False, write_csv: bool = False,
                           write_plot: bool = False,
-                          engine: str = "fast") -> dict:
+                          engine: str = "fast",
+                          trace_file: Optional[str] = None,
+                          trace_format: Optional[str] = None,
+                          key_column: Optional[str] = None) -> dict:
     """Run one scenario end-to-end and write the requested artifacts.
-    Returns ``{"scenario", "records", "seconds", "paths"}``."""
+    Returns ``{"scenario", "records", "seconds", "paths"}``.
+
+    ``trace_file`` replays the scenario's grid on an external request log
+    (wiki/CDN shape; see ``repro.cachesim.tracefiles``) instead of the
+    declared workloads; ``trace_format``/``key_column`` are its loader
+    knobs."""
     sc = get_scenario(name)
+    if trace_file is not None:
+        sc = _rebind_traces(sc, trace_file, trace_format, key_column)
     if n_requests is not None:
         n_req = n_requests
     elif smoke:
@@ -302,6 +331,17 @@ def run_scenario_pipeline(name: str, *, smoke: bool = False,
     # would produce all-miss cells
     records = run_scenario(sc, n_requests=n_req, engine=engine, golden=smoke)
     dt = time.time() - t0
+    # loader catalog/working-set stats (Sec. V-B) of any file-backed
+    # workloads, at the subsample length that actually ran — the run
+    # above warmed the .npz cache, and only the JSON artifact carries
+    # them, so skip the reload entirely otherwise
+    info_names = sc.golden_trace_names() if smoke else sc.traces
+    file_infos = sc.file_trace_infos(n_req, names=info_names) \
+        if write_json else {}
+    # a file-backed trace shorter than the requested length loads (and
+    # simulates) its full content: report what actually ran, keeping the
+    # original request when it differs so artifacts never self-contradict
+    n_run = max((r["n"] for r in records), default=n_req)
     paths: Dict[str, str] = {}
     out_dir.mkdir(parents=True, exist_ok=True)
     if write_json:
@@ -310,9 +350,11 @@ def run_scenario_pipeline(name: str, *, smoke: bool = False,
             "meta": {
                 "scenario": sc.name, "figure": sc.figure,
                 "description": sc.description, "axis": sc.axis,
-                "policies": list(sc.policies), "n_requests": n_req,
+                "policies": list(sc.policies), "n_requests": n_run,
+                **({"n_requests_requested": n_req} if n_run != n_req else {}),
                 "grid": "golden" if smoke else "display",
                 "engine": engine, "seed": sc.seed, "seconds": round(dt, 3),
+                **({"trace_info": file_infos} if file_infos else {}),
             },
             "records": records,
             "curves": curves(records, sc.axis),
@@ -373,7 +415,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--plot", action="store_true", help="write PNG curves")
     ap.add_argument("--out", default=str(FIGS_DIR), help="artifact directory")
     ap.add_argument("--engine", choices=("fast", "reference"), default="fast")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="replay the selected scenarios' grids on an "
+                         "external request log (wiki/CDN shape; gzip "
+                         "transparent) instead of their declared workloads")
+    ap.add_argument("--trace-format", choices=("keys", "csv"), default=None,
+                    help="--trace-file parse format "
+                         "(default: infer from suffix)")
+    ap.add_argument("--key-column", default=None, metavar="COL",
+                    help="--trace-file CSV key column: 0-based index or "
+                         "header name (default 0)")
     args = ap.parse_args(argv)
+    if args.trace_file is None and (args.trace_format or args.key_column):
+        ap.error("--trace-format/--key-column require --trace-file")
 
     if args.list:
         for sc in list_scenarios():
@@ -406,7 +460,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         out = run_scenario_pipeline(
             name, smoke=args.smoke, full=args.full, n_requests=args.n,
             out_dir=Path(args.out), write_json=args.json,
-            write_csv=args.csv, write_plot=args.plot, engine=args.engine)
+            write_csv=args.csv, write_plot=args.plot, engine=args.engine,
+            trace_file=args.trace_file, trace_format=args.trace_format,
+            key_column=args.key_column)
         print(_summary_line(out, get_scenario(name).axis))
     return 0
 

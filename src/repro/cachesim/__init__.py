@@ -34,11 +34,19 @@ from repro.cachesim.scenarios import (
 from repro.cachesim.simulator import SimConfig, SimResult, Simulator, run_policies
 from repro.cachesim.sweep import run_grid, run_sweep, sweep_records
 from repro.cachesim.systemstate import SystemTrace
+from repro.cachesim.tracefiles import (
+    TraceInfo,
+    load_trace_file,
+    register_trace_file,
+    trace_info,
+)
 from repro.cachesim.traces import get_trace, TRACES
 
 __all__ = ["LRUCache", "SimConfig", "SimResult", "Simulator", "SystemTrace",
            "Scenario", "SCENARIOS", "GOLDEN_SCENARIOS", "get_scenario",
            "list_scenarios", "run_scenario", "run_policies", "run_grid",
            "run_sweep", "sweep_records", "get_trace", "TRACES",
+           "TraceInfo", "load_trace_file", "register_trace_file",
+           "trace_info",
            "DecisionPlan", "TablePlan", "PROVIDERS", "plan_for",
            "register_provider", "run_cells"]

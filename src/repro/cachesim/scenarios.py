@@ -36,8 +36,10 @@ artifacts and cost curves.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.cachesim import tracefiles
 from repro.cachesim.simulator import SimConfig
 from repro.cachesim.sweep import (
     axis_column,
@@ -88,19 +90,45 @@ class Scenario:
 
     def make_traces(self, n_requests: int,
                     names: Optional[Sequence[str]] = None) -> Dict:
+        """Generate/load the scenario's workloads at ``n_requests``.
+        Names resolve through :func:`~repro.cachesim.traces.get_trace`,
+        so a trace is a synthetic generator OR a file-backed trace
+        (registered alias / ``file:<path>``); ``trace_kwargs`` carries
+        per-trace generator knobs or loader kwargs respectively."""
         names = tuple(names if names is not None else self.traces)
         return {t: get_trace(t, n_requests, seed=self.seed,
                              **self.trace_kwargs.get(t, {}))
                 for t in names}
 
+    def file_trace_infos(self, n_requests: int,
+                         names: Optional[Sequence[str]] = None) -> Dict:
+        """``{name: TraceInfo dict}`` for the scenario's FILE-backed
+        traces at the given subsample length (empty for generator-only
+        scenarios) — the figure pipeline records these in its JSON
+        artifacts so measured-workload runs stay self-describing."""
+        names = tuple(names if names is not None else self.traces)
+        out: Dict[str, dict] = {}
+        for t in names:
+            if tracefiles.is_trace_file(t):
+                _, info = tracefiles.get_file_trace(
+                    t, n_requests, with_info=True,
+                    **self.trace_kwargs.get(t, {}))
+                out[t] = info.to_dict()
+        return out
+
     # -- golden sub-grid ---------------------------------------------------
+
+    def golden_trace_names(self) -> Tuple[str, ...]:
+        """The workloads of the pinned golden sub-grid (also the smoke
+        grid's — keep every consumer on this one selection rule)."""
+        return tuple(self.golden_traces or self.traces[:1])
 
     def golden_grid(self) -> Tuple[Dict, tuple]:
         """(traces, values) of the pinned golden sub-grid."""
         values = self.golden_values if self.golden_values is not None \
             else self.values[:2]
         traces = self.make_traces(self.golden_n_requests,
-                                  names=self.golden_traces or self.traces[:1])
+                                  names=self.golden_trace_names())
         return traces, values
 
 
@@ -384,11 +412,44 @@ _scenario(
     golden_values=(64, 512),
 )
 
+# ===========================================================================
+# File-backed traces (repro.cachesim.tracefiles)
+# ===========================================================================
+
+#: committed redistributable sample logs (tools/make_trace_file.py
+#: --samples; generated from the synthetic generators, so license-clean):
+#: one recency-biased stream in the line-per-key shape, one Zipf-like
+#: stream in the CSV shape — the wiki/CDN log shapes the paper family's
+#: measured workloads arrive in.
+_DATA_DIR = Path(__file__).resolve().parents[3] / "tests" / "data"
+
+tracefiles.register_trace_file(
+    "sample_recency", _DATA_DIR / "sample_recency.log.gz")
+tracefiles.register_trace_file(
+    "sample_zipf", _DATA_DIR / "sample_zipf.csv.gz", key_column="key")
+
+_scenario(
+    name="trace_file_smoke",
+    figure="beyond",
+    description="The full policy panel on FILE-BACKED traces: both "
+                "committed sample logs (line-per-key recency stream + "
+                "CSV Zipf stream) replayed through the trace-ingestion "
+                "loader — pins the measured-workload path (parse, dense "
+                "remap, npz cache, head subsample) end to end.",
+    traces=("sample_recency", "sample_zipf"),
+    axis="update_interval",
+    values=(100, 400, 1_600),
+    base=dict(cache_size=800),
+    golden_traces=("sample_recency", "sample_zipf"),
+    golden_values=(100, 400),
+)
+
 #: scenarios pinned by the golden differential suite — every policy of
-#: each (including fna_cal everywhere and the exhaustive subroutine via
-#: ``exhaustive_small``) is asserted bit-exact fast-vs-reference
+#: each (including fna_cal everywhere, the exhaustive subroutine via
+#: ``exhaustive_small``, and the trace-file ingestion path via
+#: ``trace_file_smoke``) is asserted bit-exact fast-vs-reference
 GOLDEN_SCENARIOS = (
     "fig3_penalty", "fig3_penalty_shared", "fig4_gradle", "fig4_wiki",
     "fig7_num_caches", "hetero_tiers", "staggered_adverts", "delayed_view",
-    "exhaustive_small", "heavy_skew",
+    "exhaustive_small", "heavy_skew", "trace_file_smoke",
 )

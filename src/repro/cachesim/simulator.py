@@ -130,9 +130,19 @@ class SimConfig:
 
     def __post_init__(self):
         if len(self.costs) != self.n_caches:
-            self.costs = tuple(
-                1.0 + (i % 3) for i in range(self.n_caches)) if self.n_caches != 3 \
-                else (1.0, 2.0, 3.0)
+            # synthesise a cost vector ONLY when ``costs`` was left at the
+            # class default and the cache count moved away from it; an
+            # EXPLICIT mismatch is a config typo and must fail loudly
+            # (silently rewriting it ran scenarios with wrong costs)
+            default = type(self).__dataclass_fields__["costs"].default
+            if tuple(self.costs) != default:
+                raise ValueError(
+                    f"costs {tuple(self.costs)!r} has length "
+                    f"{len(self.costs)}, expected n_caches={self.n_caches}; "
+                    f"pass one cost per cache (a (1, 2, 3, ...) vector is "
+                    f"only synthesised while costs is left at the class "
+                    f"default {default})")
+            self.costs = tuple(1.0 + (i % 3) for i in range(self.n_caches))
         # validate per-cache sequence lengths eagerly
         for f in ("cache_sizes", "bpes", "update_intervals", "est_intervals"):
             getattr(self, f)
@@ -218,7 +228,14 @@ class _CacheNode:
         self.version = 0  # bumped whenever fp/fn estimates change
         self._since_adv = 0
         self._since_est = 0
+        # scalar-lookup memo, bounded: an unbounded per-key memo leaks
+        # hundreds of MB on recency-heavy million-request runs (~250k
+        # fresh ids per cache).  hash_indices is deterministic, so
+        # dropping entries never changes results — the memo is cleared
+        # whenever it outgrows a small multiple of the cache size (the
+        # working set a scalar caller can actually re-hit).
         self._idx_memo: Dict[int, np.ndarray] = {}
+        self._idx_memo_cap = max(2 * int(size), 1024)
         self.ind.advertise()
 
     def _idx(self, key: int) -> np.ndarray:
@@ -226,21 +243,27 @@ class _CacheNode:
         if r is None:
             r = hash_indices(np.asarray([key], dtype=np.uint64),
                              self.ind.cbf.k, self.ind.cbf.m, self.ind.cbf.seed)[0]
+            if len(self._idx_memo) >= self._idx_memo_cap:
+                self._idx_memo.clear()
             self._idx_memo[key] = r
         return r
 
     def stale_query(self, key: int) -> bool:
         return bool(np.all(self.ind.stale[self._idx(key)]))
 
-    def insert(self, key: int) -> bool:
+    def insert(self, key: int, idx: Optional[np.ndarray] = None) -> bool:
         """Controller placement: LRU put + CBF bookkeeping + periodic
         advertisement / estimation driven by insertions.  Returns True when
-        the FP/FN estimates changed (``version`` bumped)."""
+        the FP/FN estimates changed (``version`` bumped).  ``idx`` lets the
+        caller supply the key's precomputed ``hash_indices`` row (the
+        reference loop already holds one per request), bypassing the memo.
+        """
         inserted, evicted = self.lru.put(key)
         if not inserted:
             return False
         c = self.ind.cbf
-        idx = self._idx(key)
+        if idx is None:
+            idx = self._idx(key)
         c.counters[idx] = np.minimum(c.counters[idx].astype(np.int32) + 1, 255)
         if evicted is not None:
             eidx = self._idx(evicted)
@@ -430,7 +453,9 @@ class Simulator:
             res.neg_accesses += sum(1 for j in sel if not indications[j])
             res.n_requests += 1
             # --- system update: fetch-and-place into the designated cache ---
-            nodes[dj].insert(x)
+            # reuse the request's precomputed hash row (bit-exact by
+            # construction) so the scalar memo only ever sees evictions
+            nodes[dj].insert(x, idx=idx_all[dj][i])
         return res
 
 

@@ -133,10 +133,19 @@ def loop_scan_trace(n: int, block: int = 30_000, hot: int = 2_000,
 
 
 def get_trace(name: str, n: int, seed: int = 0, **kwargs) -> np.ndarray:
-    """Generate a named trace.  ``kwargs`` pass through to the generator
-    (catalog / skew / churn knobs — the scenario registry uses this for
-    heavier-than-paper regimes); the no-kwargs call stays bit-identical
-    per (name, n, seed)."""
+    """Generate or load a named trace.
+
+    ``name`` is a synthetic generator (``wiki``/``gradle``/``scarab``/
+    ``f2``; ``kwargs`` pass through as catalog / skew / churn knobs — the
+    scenario registry uses this for heavier-than-paper regimes, and the
+    no-kwargs call stays bit-identical per (name, n, seed)), OR a
+    file-backed trace (``repro.cachesim.tracefiles``): the literal
+    ``file:<path>`` spelling or an alias registered via
+    ``tracefiles.register_trace_file``.  For file traces ``n`` bounds the
+    returned length (head subsample), ``kwargs`` are loader knobs
+    (``fmt``/``key_column``/``head``/``stride``/...), and ``seed`` is
+    ignored — log replay is deterministic by nature.
+    """
     if name == "wiki":
         return zipf_trace(n, seed=seed, **kwargs)
     if name == "gradle":
@@ -145,4 +154,9 @@ def get_trace(name: str, n: int, seed: int = 0, **kwargs) -> np.ndarray:
         return mixed_trace(n, seed=seed, **kwargs)
     if name == "f2":
         return loop_scan_trace(n, seed=seed, **kwargs)
-    raise KeyError(f"unknown trace {name!r}; known: {TRACES}")
+    from repro.cachesim import tracefiles
+    if tracefiles.is_trace_file(name):
+        return tracefiles.get_file_trace(name, n, **kwargs)
+    raise KeyError(
+        f"unknown trace {name!r}; known generators: {TRACES}, registered "
+        f"trace files: {sorted(tracefiles.TRACE_FILES)} (or 'file:<path>')")

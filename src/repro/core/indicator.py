@@ -17,7 +17,7 @@ vectorisable (numpy), and identical in the JAX/Pallas kernels.
 from __future__ import annotations
 
 import math
-from typing import Iterable, List, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -87,7 +87,7 @@ class StaleIndicatorPair:
         self.cbf = CountingBloomFilter(m, k, seed)
         self.stale = np.zeros(m, dtype=bool)
         self.fn_est = 0.0
-        self.fp_est = (0.0)
+        self.fp_est = 0.0
 
     # --- cache side -------------------------------------------------------
     def advertise(self) -> np.ndarray:
@@ -118,7 +118,10 @@ class StaleIndicatorPair:
         return self.cbf.query(key)
 
 
-def theoretical_fp(bpe: float, k: int = None) -> float:
-    """Designed false-positive ratio of an optimally-configured filter."""
-    k = k or optimal_k(bpe)
+def theoretical_fp(bpe: float, k: Optional[int] = None) -> float:
+    """Designed false-positive ratio of a filter with ``k`` hash functions
+    (``k=None`` picks the optimal count; an explicit ``k=0`` means no
+    hashing at all and yields a degenerate always-positive filter)."""
+    if k is None:
+        k = optimal_k(bpe)
     return (1.0 - math.exp(-k / bpe)) ** k

@@ -41,6 +41,18 @@ def test_fp_rate_close_to_theory():
     assert fp < 4 * theory + 2e-3, (fp, theory)
 
 
+def test_theoretical_fp_explicit_k():
+    """``k`` is honoured literally: ``k=0`` means a degenerate no-hash
+    filter (always positive), not "substitute the optimal k" (the old
+    ``k or optimal_k(bpe)`` silently rewrote an explicit 0), and only
+    ``k=None`` picks the optimum."""
+    bpe = 14.0
+    assert theoretical_fp(bpe) == theoretical_fp(bpe, optimal_k(bpe))
+    assert theoretical_fp(bpe, 0) == 1.0
+    assert theoretical_fp(bpe, 1) == 1.0 - math.exp(-1.0 / bpe)
+    assert theoretical_fp(bpe, 2) != theoretical_fp(bpe)
+
+
 def test_hash_indices_deterministic_and_spread():
     idx1 = hash_indices(np.arange(100), k=8, m=4096, seed=5)
     idx2 = hash_indices(np.arange(100), k=8, m=4096, seed=5)

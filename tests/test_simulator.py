@@ -64,6 +64,37 @@ def test_identical_cache_dynamics_across_policies(gradle_trace):
         res["pi"].fn_opportunities
 
 
+def test_explicit_costs_mismatch_raises():
+    """An explicitly-passed costs vector whose length mismatches n_caches
+    is a config typo and must fail loudly (it used to be silently
+    replaced with a synthetic (1, 2, 3, ...) vector)."""
+    with pytest.raises(ValueError, match="costs"):
+        SimConfig(n_caches=4, costs=(1.0, 2.0))
+    with pytest.raises(ValueError, match="expected n_caches=2"):
+        SimConfig(n_caches=2, costs=(1.0, 2.0, 4.0))
+    # the class default still synthesises one cost per cache
+    assert SimConfig(n_caches=5).costs == (1.0, 2.0, 3.0, 1.0, 2.0)
+    assert SimConfig(n_caches=1).costs == (1.0,)
+    assert SimConfig().costs == (1.0, 2.0, 3.0)
+    # matched explicit vectors pass through untouched (fig7-style cells)
+    assert SimConfig(n_caches=4, costs=(2.0,) * 4).costs == (2.0,) * 4
+
+
+def test_idx_memo_stays_bounded():
+    """The reference engine's per-cache scalar hash memo must stay
+    O(cache size) even when the trace streams fresh ids through a small
+    cache (it used to grow one entry per distinct key and leak hundreds
+    of MB on million-request recency runs)."""
+    trace = np.arange(20_000, dtype=np.int64)    # every key distinct
+    cfg = SimConfig(n_caches=2, costs=(1.0, 2.0), cache_size=200,
+                    update_interval=100, engine="reference")
+    sim = Simulator(cfg)
+    sim.run(trace)
+    for nd in sim.nodes:
+        assert len(nd._idx_memo) <= nd._idx_memo_cap
+        assert nd._idx_memo_cap <= max(2 * 200, 1024)
+
+
 def test_exhaustive_subroutine_no_worse(gradle_trace):
     base = SimConfig(cache_size=2000, update_interval=1000, alg="exhaustive")
     res_ex = run_policies(gradle_trace[:10_000], base, policies=("fna",))

@@ -1,0 +1,174 @@
+"""Write simulator request traces out as wiki/CDN-shaped log files.
+
+The converter closes the loop of the trace-ingestion subsystem
+(``repro.cachesim.tracefiles``): any synthetic generator's output — or
+any existing log readable by the loader — can be serialised into the two
+supported on-disk shapes, so loader round-trips are testable and
+license-clean sample logs can be committed.
+
+Formats (mirroring the loader):
+
+  * ``keys`` — one key token per line (wiki-access-log shape);
+  * ``csv``  — ``ts,key,bytes`` rows with a header (CDN-log shape); keys
+    are written as ``obj<id>`` string tokens so the loader's dense
+    remapping of non-integer keys is exercised, ``bytes`` is a
+    deterministic function of the key (no extra RNG).
+
+``--gzip`` compresses with a zeroed mtime header, so regenerating a
+sample yields byte-identical files (diffable in review / CI).
+
+Usage::
+
+    # a generator, serialised
+    python tools/make_trace_file.py --generator gradle --n 60000 --seed 7 \\
+        --format keys --gzip -o /tmp/gradle.log.gz
+
+    # convert an existing log between shapes
+    python tools/make_trace_file.py --input access.log --format csv -o out.csv
+
+    # regenerate the committed sample logs (tests/data/)
+    python tools/make_trace_file.py --samples
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import io
+import sys
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.cachesim import tracefiles  # noqa: E402
+from repro.cachesim.traces import TRACES, get_trace  # noqa: E402
+
+SAMPLES_DIR = REPO / "tests" / "data"
+
+#: the committed redistributable sample logs (generated from the synthetic
+#: generators, so they are license-clean): one recency-biased stream in the
+#: line-per-key shape, one Zipf-like stream in the CSV shape — the two log
+#: shapes the paper family's wiki/CDN workloads arrive in.
+SAMPLES = (
+    dict(out="sample_recency.log.gz", generator="gradle", fmt="keys",
+         n=60_000, seed=7, kwargs={}),
+    dict(out="sample_zipf.csv.gz", generator="wiki", fmt="csv",
+         n=60_000, seed=11, kwargs={"catalog": 50_000}),
+)
+
+
+def _fake_bytes(key: int) -> int:
+    """Deterministic CDN-ish object size column (Knuth hash, 1K..900K)."""
+    return (int(key) * 2654435761) % 900_000 + 1_000
+
+
+def write_trace_file(ids: np.ndarray, path: Path, fmt: str,
+                     compress: bool = False) -> Path:
+    """Serialise a request array into one of the loader's formats."""
+    buf = io.StringIO()
+    if fmt == "keys":
+        buf.write("# one request key per line\n")
+        for x in ids:
+            buf.write(f"{int(x)}\n")
+    elif fmt == "csv":
+        buf.write("ts,key,bytes\n")
+        for i, x in enumerate(ids):
+            buf.write(f"{i},obj{int(x)},{_fake_bytes(int(x))}\n")
+    else:
+        raise ValueError(f"unknown format {fmt!r}; known: 'keys', 'csv'")
+    data = buf.getvalue().encode("utf-8")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    if compress:
+        # mtime=0: byte-identical output per input (committable/diffable)
+        with open(path, "wb") as f:
+            with gzip.GzipFile(fileobj=f, mode="wb", mtime=0) as gz:
+                gz.write(data)
+    else:
+        path.write_bytes(data)
+    return path
+
+
+def write_samples(out_dir: Path = SAMPLES_DIR) -> list:
+    paths = []
+    for spec in SAMPLES:
+        ids = get_trace(spec["generator"], spec["n"], seed=spec["seed"],
+                        **spec["kwargs"])
+        p = write_trace_file(ids, out_dir / spec["out"], spec["fmt"],
+                             compress=True)
+        info = tracefiles.load_trace_file(
+            p, key_column="key" if spec["fmt"] == "csv" else 0,
+            cache=False, with_info=True)[1]
+        print(f"  wrote {p.relative_to(REPO) if p.is_relative_to(REPO) else p}"
+              f"  ({info.n_requests} requests, {info.n_unique} unique, "
+              f"top-1% share {info.top1pct_share:.3f})")
+        paths.append(p)
+    return paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    src = ap.add_mutually_exclusive_group()
+    src.add_argument("--generator", choices=TRACES,
+                     help="serialise a synthetic generator")
+    src.add_argument("--input", help="convert an existing log file "
+                                     "(any loader-readable shape)")
+    src.add_argument("--samples", action="store_true",
+                     help=f"regenerate the committed sample logs in "
+                          f"{SAMPLES_DIR.relative_to(REPO)}")
+    ap.add_argument("--n", type=int, default=60_000,
+                    help="generator request count (default 60000)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kw", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="extra generator kwarg (repeatable), e.g. "
+                         "--kw catalog=50000 --kw alpha=1.2")
+    ap.add_argument("--input-format", choices=("keys", "csv"), default=None,
+                    help="--input parse format (default: infer from suffix)")
+    ap.add_argument("--key-column", default="0",
+                    help="--input CSV key column: index or name (default 0)")
+    ap.add_argument("--format", choices=("keys", "csv"), default="keys",
+                    help="output shape (default keys)")
+    ap.add_argument("--gzip", action="store_true", help="compress the output")
+    ap.add_argument("-o", "--out", help="output path")
+    args = ap.parse_args(argv)
+
+    if args.samples:
+        write_samples()
+        return 0
+    if not args.out:
+        ap.error("-o/--out is required (unless --samples)")
+    if args.generator:
+        kwargs = {}
+        for kv in args.kw:
+            k, sep, v = kv.partition("=")
+            if not sep or not k:
+                ap.error(f"--kw expects KEY=VALUE, got {kv!r}")
+            try:
+                kwargs[k] = int(v)
+            except ValueError:
+                try:
+                    kwargs[k] = float(v)
+                except ValueError:
+                    ap.error(f"--kw {k}: generator knobs are numeric, "
+                             f"got {v!r}")
+        ids = get_trace(args.generator, args.n, seed=args.seed, **kwargs)
+    elif args.input:
+        key_column = (int(args.key_column) if args.key_column.isdigit()
+                      else args.key_column)
+        ids = tracefiles.load_trace_file(
+            args.input, fmt=args.input_format, key_column=key_column,
+            cache=False)
+    else:
+        ap.error("pass --generator, --input, or --samples")
+    p = write_trace_file(ids, Path(args.out), args.format,
+                         compress=args.gzip)
+    info = tracefiles.trace_info(ids, path=str(p), fmt=args.format)
+    print(f"wrote {p}: {info.n_requests} requests, {info.n_unique} unique, "
+          f"top-1% share {info.top1pct_share:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
