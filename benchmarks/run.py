@@ -10,7 +10,9 @@ Prints ``name,us_per_call,derived`` CSV (one line per benchmark):
 [--interpret auto|on|off] [--json PATH]``
 
 ``--json`` additionally writes every record as a JSON list of
-``{"name", "us_per_call", "derived"}`` objects — the CI bench-smoke job
+``{"name", "us_per_call", "derived"}`` objects (plus any per-row context
+fields a section attaches — table row counts, device counts) — the CI
+bench-smoke job
 uploads it as the ``BENCH_sim.json`` artifact so the perf trajectory
 accumulates per commit, and gates on the headline speedups.
 """
@@ -109,6 +111,13 @@ def sim_benches(full: bool):
     return run_sim_benches(full)
 
 
+def sim_jax_benches(full: bool):
+    """JAX/Pallas table-core rows: jitted (and device-sharded) decision
+    table builds vs the NumPy mirror on the Fig. 3 grid shape."""
+    from benchmarks.sim import run_jax_benches
+    return run_jax_benches(full)
+
+
 def serving_bench(full: bool):
     out = []
     try:
@@ -137,6 +146,7 @@ def main() -> None:
         "router": router_bench,
         "kernels": lambda full: kernel_benches(full, interpret=interpret),
         "sim": sim_benches,
+        "sim_jax": sim_jax_benches,
         "serving": serving_bench,
     }
     records = []
@@ -144,11 +154,17 @@ def main() -> None:
     for sec, fn in sections.items():
         if only and sec not in only:
             continue
-        for name, us, derived in fn(args.full):
+        # rows are (name, us, derived[, extras]); extras is an optional
+        # dict of context fields (row counts, device counts, ...) merged
+        # into the JSON record — the CSV stays 3 columns
+        for name, us, derived, *rest in fn(args.full):
             print(f"{name},{us:.3f},{derived:.6g}")
             sys.stdout.flush()
-            records.append({"name": name, "us_per_call": us,
-                            "derived": float(derived)})
+            rec = {"name": name, "us_per_call": us,
+                   "derived": float(derived)}
+            if rest:
+                rec.update(rest[0])
+            records.append(rec)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(records, f, indent=1)

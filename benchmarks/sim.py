@@ -8,7 +8,19 @@ sweep + stacked tables + replays vs per-cell full runs).
 
 CSV columns: us_per_call = wall-clock per simulated request; derived =
 requests/sec (or the speedup/amortisation factor for the ``sim_speedup`` /
-``sweep_amortisation*`` rows).
+``sweep_amortisation*`` rows).  Speedup/amortisation rows attach an
+extras dict (JSON only) recording the workload shape behind the ratio —
+request counts, and for table-build rows the (cells x versions x
+patterns) row counts — so a perf trajectory across commits can tell a
+regression from a workload change.
+
+``run_jax_benches`` (section ``sim_jax``) covers the jitted table core:
+the stacked (Fig. 3 penalty-grid-shaped) decision-table build on the
+JAX backend vs the per-cell NumPy mirror (``sim_tables_jax_speedup`` —
+CI gates this >= 1), the device-sharding efficiency of the same build
+(``sweep_shard_efficiency``), and the Pallas subset-DP kernel in
+interpret mode with an inline bit-exactness assert against the NumPy
+oracle (``sim_subsetdp_pallas_interpret``).
 """
 from __future__ import annotations
 
@@ -54,7 +66,9 @@ def run_sim_benches(full: bool):
         out.append((f"sim_throughput_ref_{policy}_gradle",
                     dt_ref / n_ref * 1e6, rps_ref))
         out.append((f"sim_speedup_{policy}_gradle",
-                    dt_fast / HEADLINE_REQUESTS * 1e6, rps_fast / rps_ref))
+                    dt_fast / HEADLINE_REQUESTS * 1e6, rps_fast / rps_ref,
+                    {"n_requests": HEADLINE_REQUESTS,
+                     "n_requests_ref": n_ref}))
 
     # --- shared-SystemTrace amortisation: 1 sweep + P replays vs P full
     # runs over the same (trace, system config); min-of-2 on both sides
@@ -73,7 +87,8 @@ def run_sim_benches(full: bool):
     dt_indep = min(_time_policies(share_system=False) for _ in range(2))
     out.append(("sweep_amortisation",
                 dt_shared / (n_amort * len(SWEEP_POLICIES)) * 1e6,
-                dt_indep / dt_shared))
+                dt_indep / dt_shared,
+                {"n_requests": n_amort, "policies": len(SWEEP_POLICIES)}))
 
     # --- decision-side cross-cell sharing: a miss-penalty grid (the
     # Fig. 3 axis) computes ONE SystemTrace for all its cells and stacks
@@ -95,7 +110,9 @@ def run_sim_benches(full: bool):
     cells = len(DECISION_PENALTIES) * len(DECISION_POLICIES)
     out.append(("sweep_amortisation_decision",
                 dt_dec_shared / (n_dec * cells) * 1e6,
-                dt_dec_indep / dt_dec_shared))
+                dt_dec_indep / dt_dec_shared,
+                {"n_requests": n_dec, "cells": len(DECISION_PENALTIES),
+                 "policies": len(DECISION_POLICIES)}))
 
     # --- requests/sec per policy x trace (fast engine) ------------------
     n_req = 100_000 if full else 30_000
@@ -107,4 +124,94 @@ def run_sim_benches(full: bool):
             dt = _run_once(cfg, tr)
             out.append((f"sim_{policy}_{trace_name}", dt / n_req * 1e6,
                         n_req / dt))
+    return out
+
+
+def run_jax_benches(full: bool):
+    """JAX/Pallas table-core rows (section ``sim_jax``); see the module
+    docstring.  Runs entirely on host/CPU (the Pallas row uses interpret
+    mode), so the CI smoke job covers every row."""
+    import numpy as np
+
+    from repro.cachesim import SimConfig, Simulator, get_trace
+    from repro.cachesim.systemstate import SystemTrace
+    from repro.core.batched import (
+        _subset_dp,
+        selection_tables,
+        selection_tables_cells_jax,
+    )
+    from repro.kernels.subsetdp import subset_dp
+    from repro.launch.mesh import make_sweep_mesh
+
+    out = []
+    # --- the Fig. 3 grid shape: a real SystemTrace view history, every
+    # (penalty x fna/fno) decision cell stacked — jitted build vs the
+    # per-cell NumPy mirror (the fast engine's two table backends) -------
+    n_req = 100_000 if full else 50_000
+    trace = get_trace("gradle", n_req, seed=0)
+    cfg = SimConfig(engine="fast", update_interval=200)
+    st = SystemTrace.compute(Simulator(cfg), trace)
+    pi_v, nu_v = st.pi_v, st.nu_v
+    v, n = pi_v.shape
+    k = 1 << n
+    cells = [(np.asarray(cfg.costs, np.float64), m, f)
+             for m in DECISION_PENALTIES for f in (False, True)]
+    c = len(cells)
+    rows = c * v * k
+    costs_cells = np.stack([j[0] for j in cells])
+    penalties = np.asarray([j[1] for j in cells])
+    fno_cells = np.asarray([j[2] for j in cells])
+
+    def _numpy_build():
+        t0 = time.time()
+        for costs, m, f in cells:
+            selection_tables(costs, pi_v, nu_v, m, fno=f, backend="numpy")
+        return time.time() - t0
+
+    def _jax_build(mesh=None):
+        t0 = time.time()
+        selection_tables_cells_jax(costs_cells, pi_v, nu_v, penalties,
+                                   fno_cells, mesh=mesh)
+        return time.time() - t0
+
+    _jax_build()                                  # compile + warm
+    dt_np = min(_numpy_build() for _ in range(3))
+    dt_jax = min(_jax_build() for _ in range(3))
+    out.append(("sim_tables_jax_speedup", dt_jax / rows * 1e6,
+                dt_np / dt_jax,
+                {"rows": rows, "cells": c, "versions": v, "patterns": k}))
+
+    # --- device sharding: same stacked build over the sweep mesh; the
+    # efficiency is (t_single / t_sharded) / devices, 1.0 on one device --
+    mesh = make_sweep_mesh()
+    devices = 1 if mesh is None else int(mesh.size)
+    if mesh is None:
+        dt_sharded, eff = dt_jax, 1.0
+    else:
+        _jax_build(mesh)                          # compile + warm
+        dt_sharded = min(_jax_build(mesh) for _ in range(3))
+        eff = (dt_jax / dt_sharded) / devices
+    out.append(("sweep_shard_efficiency", dt_sharded / rows * 1e6, eff,
+                {"rows": rows, "devices": devices}))
+
+    # --- Pallas subset-DP kernel, interpret mode (CPU CI): throughput in
+    # table rows/sec, with an inline bit-exactness assert vs the oracle --
+    rng = np.random.default_rng(0)
+    n_dp = 8
+    b_dp = 4096 if full else 1024
+    dp_costs = rng.uniform(0.05, 5.0, n_dp)
+    dp_rhos = rng.uniform(0.0, 1.0, (b_dp, n_dp))
+    ref = _subset_dp(dp_costs, dp_rhos, 100.0)
+    got = subset_dp(dp_costs, dp_rhos, 100.0, backend="pallas",
+                    interpret=True)
+    assert got.tobytes() == ref.tobytes(), \
+        "Pallas subset-DP drifted off the NumPy oracle"
+    t0 = time.time()
+    iters = 3
+    for _ in range(iters):
+        subset_dp(dp_costs, dp_rhos, 100.0, backend="pallas",
+                  interpret=True)
+    dt = (time.time() - t0) / iters
+    out.append(("sim_subsetdp_pallas_interpret", dt / b_dp * 1e6,
+                b_dp / dt, {"rows": b_dp, "n_caches": n_dp}))
     return out

@@ -31,11 +31,14 @@ in match order:
                     ``repro.core.batched.selection_tables`` call
                     (CS_FNA and CS_FNO)
   ``exhaustive``    the batched 2^n-subset enumeration
-                    (``repro.core.batched.exhaustive_tables``, n <= 8)
+                    (``repro.core.batched.exhaustive_tables``, chunked;
+                    n <= 12 — the full table budget)
   ``scalar``        the generic fallback: one scalar ``sim.alg`` call per
                     (version, pattern) — the ONLY remaining scalar table
-                    loop, reachable only when no batched provider matches
-                    (today: the exhaustive subroutine at 8 < n <= 12)
+                    loop.  No built-in (policy, subroutine, n <= 12)
+                    combination reaches it any more; it stays registered
+                    as the safety net for externally registered scalar
+                    subroutines
   ================  =====================================================
 
 Table plans memoise their ``[V * 2^n]`` selection-bitmask arrays on the
@@ -226,9 +229,16 @@ class DsPgmTables(TablePlan):
 class ExhaustiveTables(TablePlan):
     """CS_FNA / CS_FNO with the exact Eq. (10) subroutine — the batched
     2^n-subset enumeration (IEEE operation-order-exact vs the scalar
-    loop; n <= 8)."""
+    loop).  Covers the full table budget (n <= 12 =
+    ``MAX_EXHAUSTIVE_TABLE_CACHES``): the build is chunked so the
+    [rows, 2^n] subset matrix stays memory-bounded however large the
+    version history grows — ``chunk_rows`` overrides the default
+    ~32 MB auto-sizing (None) for callers tuning the working set."""
 
     name = "exhaustive"
+    #: rows per subset-DP chunk; None = auto-size from the chunk budget
+    #: (``repro.core.batched.EXHAUSTIVE_CHUNK_ELEMS``)
+    chunk_rows = None
 
     def matches(self, cfg) -> bool:
         return cfg.policy in ("fna", "fno") and cfg.alg == "exhaustive" \
@@ -243,15 +253,17 @@ class ExhaustiveTables(TablePlan):
         cfg = sim.cfg
         return exhaustive_tables(list(cfg.costs), st.pi_v, st.nu_v,
                                  cfg.miss_penalty,
-                                 fno=(cfg.policy == "fno")).reshape(-1)
+                                 fno=(cfg.policy == "fno"),
+                                 chunk=self.chunk_rows).reshape(-1)
 
 
 class ScalarTables(TablePlan):
     """Generic fallback: one scalar subroutine call per (version,
-    pattern).  The only scalar table loop left in the fast engine —
-    reachable only when no batched provider matches (today: the
-    exhaustive subroutine at 8 < n <= 12, where the batched subset
-    matrix would outgrow its budget)."""
+    pattern).  The only scalar table loop left in the fast engine.  Now
+    that the exhaustive provider covers the whole n <= 12 table budget,
+    no built-in (policy, subroutine) combination reaches this plan; it
+    stays registered as the safety net for externally registered scalar
+    subroutines (any ``sim.alg`` without a batched twin)."""
 
     name = "scalar"
 
@@ -325,14 +337,25 @@ def plan_for(cfg) -> Optional[DecisionPlan]:
 # Cross-cell sharing for decision-side sweep axes
 # ---------------------------------------------------------------------------
 
-def prefetch_tables(system, cfgs: Sequence, policies: Sequence[str]) -> None:
+def prefetch_tables(system, cfgs: Sequence, policies: Sequence[str],
+                    *, backend: str = "numpy", mesh=None) -> None:
     """Stack every ds_pgm-family (cell, policy) table build of a
     decision-side group into ONE batched
     ``repro.core.batched.selection_tables_cells`` call, seeding
     ``system.plan_cache`` so the per-cell replays become pure lookups.
 
     Row-level independence of ``ds_pgm_batched`` makes each stacked slice
-    bit-identical to the per-cell build it replaces."""
+    bit-identical to the per-cell build it replaces.
+
+    ``backend="jax"`` routes the stacked build through the jitted
+    ``selection_tables_cells_jax`` kernel instead — optionally sharded
+    over the cell axis of ``mesh`` (``launch.mesh.make_sweep_mesh``).
+    Unlike the NumPy path it stacks even a SINGLE job: the jit dispatch
+    is the same either way, and seeding the cache keeps every cell's
+    tables on the one compiled path.  Masks can differ from the NumPy
+    build only inside the ~1e-12 near-tie dead-band (FMA contraction;
+    see ``selection_tables_cells_jax``).
+    """
     ds_plan = next(p for p in PROVIDERS if isinstance(p, DsPgmTables))
     jobs = []                # (cache key, costs, penalty, fno)
     seen = set()
@@ -347,12 +370,21 @@ def prefetch_tables(system, cfgs: Sequence, policies: Sequence[str]) -> None:
             seen.add(key)
             jobs.append((key, tuple(pcfg.costs),
                          float(pcfg.miss_penalty), p == "fno"))
-    if len(jobs) < 2:        # a single build gains nothing from stacking
+    if not jobs:
         return
-    from repro.core.batched import selection_tables_cells
-    masks = selection_tables_cells(
-        [j[1] for j in jobs], system.pi_v, system.nu_v,
-        [j[2] for j in jobs], [j[3] for j in jobs])      # [C, V, 2^n, n]
+    if backend == "jax":
+        from repro.core.batched import selection_tables_cells_jax
+        masks = selection_tables_cells_jax(
+            [j[1] for j in jobs], system.pi_v, system.nu_v,
+            [j[2] for j in jobs], [j[3] for j in jobs],
+            mesh=mesh)                                   # [C, V, 2^n, n]
+    else:
+        if len(jobs) < 2:    # a single build gains nothing from stacking
+            return
+        from repro.core.batched import selection_tables_cells
+        masks = selection_tables_cells(
+            [j[1] for j in jobs], system.pi_v, system.nu_v,
+            [j[2] for j in jobs], [j[3] for j in jobs])  # [C, V, 2^n, n]
     n = system.n
     pow2 = 1 << np.arange(n, dtype=np.int64)
     for (key, *_), mask in zip(jobs, masks):
@@ -361,7 +393,8 @@ def prefetch_tables(system, cfgs: Sequence, policies: Sequence[str]) -> None:
 
 
 def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
-              share_system: bool = True) -> List[Dict]:
+              share_system: bool = True, *, backend: str = "numpy",
+              mesh=None) -> List[Dict]:
     """Run a policy panel over several decision-side cells that share one
     system evolution; returns ``[{policy: SimResult}]`` aligned with
     ``cfgs``.
@@ -373,6 +406,11 @@ def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
     every (cell, policy) are prefetched in one stacked batched call.
     ``share_system=False`` forces independent full runs (benchmarking the
     amortisation itself); the reference engine always runs full.
+
+    ``backend="jax"`` builds the stacked tables with the jitted
+    (optionally device-sharded) kernel — ``mesh=None`` auto-creates the
+    sweep mesh when more than one device is visible (see
+    :func:`prefetch_tables`).  The replay phase is unchanged either way.
     """
     from repro.cachesim.simulator import Simulator
     from repro.cachesim.systemstate import SystemTrace
@@ -381,6 +419,9 @@ def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
     system = None
     share = share_system and bool(cfgs) and trace.shape[0] > 0 and \
         all(cfg.engine == "fast" for cfg in cfgs)
+    if backend == "jax" and mesh is None:
+        from repro.launch.mesh import make_sweep_mesh
+        mesh = make_sweep_mesh()
     if share:
         fastable = any(
             plan_for(dataclasses.replace(cfg, policy=p)) is not None
@@ -388,7 +429,8 @@ def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
         if fastable:
             donor = Simulator(cfgs[0])
             system = SystemTrace.compute(donor, trace)
-            prefetch_tables(system, cfgs, policies)
+            prefetch_tables(system, cfgs, policies,
+                            backend=backend, mesh=mesh)
     for ci, cfg in enumerate(cfgs):
         for p in policies:
             sim = Simulator(dataclasses.replace(cfg, policy=p))

@@ -49,7 +49,7 @@ The engine speculates and commits:
 Bit-exactness: bridge-committed requests replicate the reference
 operations literally; speculatively-committed requests are verified
 equal to the float64 batched evaluation of the true rho (DS_PGM prefix
-scan, or the 2^n-subset enumeration when ``alg="exhaustive"``, n <= 8) —
+scan, or the 2^n-subset enumeration when ``alg="exhaustive"``, n <= 12) —
 the same near-tie parity caveat as ``repro.cachesim.fastpath``, ruled
 out empirically by ``tests/test_fna_cal_fast.py`` across traces and
 calibration settings.
@@ -91,9 +91,9 @@ def replay_fna_cal(sim, st: SystemTrace, res):
     # the speculate-and-commit loop is subroutine-agnostic: it needs a
     # scalar bitmask call (bridge/table rows) and a batched float64
     # verifier over an arbitrary rho matrix.  ds_pgm pairs the stripped
-    # scalar variant with the prefix-scan verifier; exhaustive (n <= 8 —
-    # the Simulator dispatch falls back to the reference loop beyond) pairs
-    # it with the batched 2^n-subset enumeration.
+    # scalar variant with the prefix-scan verifier; exhaustive (n <= 12 —
+    # the Simulator dispatch falls back to the reference loop beyond the
+    # table budget) pairs it with the batched 2^n-subset enumeration.
     if cfg.alg == "exhaustive":
         mask_fn, verify_fn = exhaustive_mask, rho_exhaustive_tables
     else:

@@ -65,10 +65,10 @@ Everything else (LRU dynamics, CBF bookkeeping cadence, Eq. 7-9 updates,
 cost accounting order) is replicated operation-for-operation, so the two
 engines produce identical ``SimResult``s for every policy.  Both
 subroutines run fast: DS_PGM through the batched prefix scan, exhaustive
-through a batched 2^n-subset enumeration (n <= 8, bit-exact DP over
-subset masks).  The only remaining reference-engine fallbacks are cache
-counts beyond the table budgets (n > 12 for DS_PGM tables, n > 8 for the
-exhaustive enumeration under ``fna_cal``).
+through a batched 2^n-subset enumeration (chunked, bit-exact DP over
+subset masks, n <= 12 like every table plan).  The only remaining
+reference-engine fallback is cache counts beyond the table budget
+(n > 12).
 """
 from __future__ import annotations
 

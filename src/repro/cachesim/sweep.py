@@ -95,6 +95,8 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
              policies: Sequence[str] = DEFAULT_POLICIES,
              n_requests: int = 100_000,
              share_system: bool = True,
+             backend: str = "numpy",
+             mesh=None,
              ) -> Dict[CellKey, Dict[str, SimResult]]:
     """Run a policy grid over an arbitrary system axis; returns
     ``{(trace_name, label): {policy: SimResult}}``.
@@ -103,6 +105,13 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
     sequence of :func:`~repro.cachesim.traces.get_trace` names generated
     at ``n_requests`` with ``base.seed``.  ``share_system=False`` forces
     per-policy full runs (benchmarking the amortisation itself).
+
+    ``backend="jax"`` builds each group's stacked decision tables with
+    the jitted kernel, sharding the cell axis across the devices of
+    ``mesh`` (auto-created when None and more than one device is
+    visible); see :func:`repro.cachesim.engine.run_cells`.  Replay and
+    the returned results are unchanged up to the ~1e-12 near-tie
+    dead-band on table masks.
     """
     from repro.cachesim.engine import run_cells
     if not isinstance(traces, Mapping):
@@ -129,7 +138,8 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
         results: Dict[CellKey, Dict[str, SimResult]] = {}
         for cells in groups.values():
             group_out = run_cells(trace, [cfg for _, cfg in cells],
-                                  policies, share_system=share_system)
+                                  policies, share_system=share_system,
+                                  backend=backend, mesh=mesh)
             for (key, _), cell_res in zip(cells, group_out):
                 results[key] = cell_res
         for key in order:       # keep the caller's cell order

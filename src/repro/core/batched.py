@@ -18,10 +18,21 @@ from jax.experimental import enable_x64
 
 EPS = 1e-12
 
-# the batched exhaustive table build enumerates 2^n subsets per pattern
-# row (4^n work per version): past this the scalar/reference loop wins.
-# Single source of truth for the fast engine's exhaustive dispatch.
-MAX_EXHAUSTIVE_TABLE_CACHES = 8
+# The exhaustive dispatch tiers (single source of truth for the fast
+# engine):
+#   * n <= MAX_EXHAUSTIVE_TABLE_CACHES: the batched table build
+#     (``exhaustive_tables``) — chunked so the [rows, 2^n] subset matrix
+#     never exceeds ~EXHAUSTIVE_CHUNK_ELEMS float64 elements, which makes
+#     the full engine budget (``engine.MAX_TABLE_CACHES`` = 12) memory-
+#     safe; beyond 12 the [V * 2^n] table itself outgrows the replay.
+#   * n <= 16: the per-row enumeration (``rho_exhaustive_tables``) for
+#     callers that chunk their own rows (the calibrated engine verifies
+#     <= 256-row segments at a time).
+#   * n > 16: nowhere — 2^n subset values per row stop being representable
+#     work; the simulator falls back to the reference loop.
+MAX_EXHAUSTIVE_TABLE_CACHES = 12
+#: float64 elements per exhaustive DP chunk (rows * 2^n); ~32 MB
+EXHAUSTIVE_CHUNK_ELEMS = 1 << 22
 
 
 def exclusions(h, fp, fn) -> Tuple[jax.Array, jax.Array]:
@@ -105,8 +116,8 @@ def selection_tables(costs, pi, nu, miss_penalty, *, fno: bool = False,
     ``backend="numpy"`` routes through :func:`rho_selection_tables` — the
     float64 NumPy mirror of :func:`ds_pgm_batched` — which skips the JAX
     dispatch overhead entirely; the calibrated fast engine uses it for
-    its many small per-segment table builds.  (No CS_FNO support there:
-    the segmented replay never needs it.)
+    its many small per-segment table builds.  CS_FNO is expressed there
+    as the per-row ``allowed`` candidate mask.
     """
     pi = np.atleast_2d(np.asarray(pi, np.float64))
     nu = np.atleast_2d(np.asarray(nu, np.float64))
@@ -116,9 +127,9 @@ def selection_tables(costs, pi, nu, miss_penalty, *, fno: bool = False,
     rhos = np.where(pat_bits[None, :, :] > 0,
                     pi[:, None, :], nu[:, None, :]).reshape(v * k, n)
     if backend == "numpy":
-        if fno:
-            raise ValueError("backend='numpy' does not support fno=True")
-        return rho_selection_tables(costs, rhos, miss_penalty).reshape(v, k, n)
+        allowed = np.tile(pat_bits.astype(bool), (v, 1)) if fno else None
+        return rho_selection_tables(
+            costs, rhos, miss_penalty, allowed=allowed).reshape(v, k, n)
     with enable_x64():
         mask = ds_pgm_batched(
             jnp.asarray(np.asarray(costs, np.float64)),
@@ -177,7 +188,144 @@ def selection_tables_cells(costs_cells, pi, nu, penalties, fno_cells,
     return out.reshape(c, v, k, n)
 
 
-def rho_selection_tables(costs, rhos, miss_penalty) -> np.ndarray:
+@jax.jit
+def _cells_tables_kernel(costs_u, fno_u, group_idx, penalties, pi, nu):
+    """[C, V*2^n, n] bool masks: the grouped two-stage evaluation of
+    :func:`ds_pgm_batched` over C decision cells against one shared
+    [V, n] (pi, nu) view history.
+
+    The DS_PGM potential-gain order ``c_j / -log(rho_j)`` does not
+    depend on the miss penalty — on a penalty-axis grid (the paper's
+    Fig. 3) every cell with the same (costs, CS_FNO) pair shares one
+    sort.  Stage 1 therefore sorts only the G UNIQUE (costs, fno)
+    groups (``costs_u`` [G, n], ``fno_u`` [G]); stage 2 gathers each
+    cell's group (``group_idx`` [C]) and finishes with its own penalty
+    (prefix costs, argmin, scatter back to cache order).  Both stages
+    replicate :func:`ds_pgm_batched`'s operation chain exactly — the
+    one deviation is inverting the sort permutation by scatter instead
+    of a second argsort, which is the same bijection computed exactly.
+
+    The pattern grid / rho stack is rebuilt ON DEVICE from the
+    replicated (pi, nu) pair, so only [G, .] / [C, .] cell parameters
+    travel along the sharded cell axis.  ``fno_u`` selects per group
+    between the CS_FNO pattern mask and all-ones; an all-ones mask is
+    an exact identity in the chain (``where(True, x, .)``).
+    """
+    v, n = pi.shape
+    k = 1 << n
+    pats = ((jnp.arange(k, dtype=jnp.int32)[:, None]
+             >> jnp.arange(n, dtype=jnp.int32)[None, :]) & 1)     # [K, n]
+    rhos = jnp.where(pats[None, :, :] > 0,
+                     pi[:, None, :], nu[:, None, :]).reshape(v * k, n)
+    r = jnp.clip(rhos, EPS, 1.0 - EPS)
+    pat_rows = jnp.tile(pats, (v, 1))                             # [V*K, n]
+    ones = jnp.ones_like(pat_rows)
+    rows = v * k
+
+    def sort_group(costs, fno):
+        # ds_pgm_batched's sort-dependent half, penalty-free
+        costs_b = jnp.broadcast_to(costs, (rows, n))
+        allowed_rows = jnp.where(fno, pat_rows, ones) > 0
+        key = jnp.where(allowed_rows, costs_b / -jnp.log(r), jnp.inf)
+        order = jnp.argsort(key, axis=1)
+        c_sorted = jnp.take_along_axis(costs_b, order, 1)
+        r_sorted = jnp.take_along_axis(r, order, 1)
+        allowed = jnp.take_along_axis(allowed_rows, order, 1)
+        c_sorted = jnp.where(allowed, c_sorted, jnp.inf)
+        r_sorted = jnp.where(allowed, r_sorted, 1.0)
+        return (order, jnp.cumsum(c_sorted, axis=1),
+                jnp.cumsum(jnp.log(r_sorted), axis=1))
+
+    order_g, csum_g, lprod_g = jax.vmap(sort_group)(costs_u, fno_u)
+
+    def finish_cell(gi, m):
+        order, csum, lprod = order_g[gi], csum_g[gi], lprod_g[gi]
+        phi = jnp.concatenate(
+            [jnp.full((rows, 1), m, csum.dtype),
+             csum + m * jnp.exp(lprod)], axis=1)                  # [rows, n+1]
+        best = jnp.argmin(phi, axis=1)
+        pick_sorted = jnp.arange(n)[None, :] < best[:, None]
+        # back to cache order: cache j is picked iff its sorted slot is
+        # (one-hot contraction — the inverse permutation, exactly, and
+        # vectorizable where an XLA:CPU scatter would scalar-loop)
+        onehot = order[:, :, None] == jnp.arange(n)[None, None, :]
+        return jnp.any(pick_sorted[:, :, None] & onehot, axis=1)
+
+    return jax.vmap(finish_cell)(group_idx, penalties)
+
+
+def selection_tables_cells_jax(costs_cells, pi, nu, penalties, fno_cells,
+                               *, mesh=None) -> np.ndarray:
+    """[C, V, 2^n, n] decision tables for C cells — the jitted (and
+    optionally device-sharded) twin of :func:`selection_tables_cells`.
+
+    One compiled computation evaluates every (cell x version x pattern)
+    row.  The potential-gain sort does not depend on the miss penalty,
+    so cells are deduplicated host-side into unique (costs, fno) groups:
+    the sort/prefix stage runs once per group and each cell finishes
+    with its own penalty — on a penalty-axis grid (the paper's Fig. 3)
+    that is one sort for all eight penalty cells per CS_FNO flag.  With
+    a ``mesh`` (see ``repro.launch.mesh.make_sweep_mesh``) both the
+    group and cell axes are padded to a multiple of the mesh size and
+    row-sharded across devices while the shared (pi, nu) history is
+    replicated, so a whole sweep grid's table phase runs as one SPMD
+    computation.  Rows are evaluated independently, so cell c's slice
+    equals a per-cell :func:`selection_tables` call up to the jit
+    scheduling caveat below.
+
+    Parity note: inside the jitted computation XLA may contract the
+    ``csum + m * exp(lprod)`` prefix-cost pair into an FMA (one rounding
+    instead of two), shifting a prefix cost by ~1 ulp relative to the
+    eager/NumPy evaluation.  A mask can therefore flip ONLY where two
+    prefix costs tie to within that ulp — inside the same ~1e-12
+    near-tie dead-band already documented on :func:`selection_tables`;
+    the differential tests gate exact mask agreement away from it.
+    """
+    pi = np.atleast_2d(np.asarray(pi, np.float64))
+    nu = np.atleast_2d(np.asarray(nu, np.float64))
+    v, n = pi.shape
+    k = 1 << n
+    costs_cells = np.atleast_2d(np.asarray(costs_cells, np.float64))
+    penalties = np.asarray(penalties, np.float64)
+    fno_cells = np.asarray(fno_cells, bool)
+    c = costs_cells.shape[0]
+    if c == 0:
+        return np.empty((0, v, k, n), dtype=bool)
+    # dedupe the penalty-independent sort stage: one group per unique
+    # (costs, fno) pair, each cell pointing at its group
+    keys = [(cc.tobytes(), bool(f))
+            for cc, f in zip(costs_cells, fno_cells)]
+    uniq: dict = {}
+    group_idx = np.empty(c, np.int64)
+    for i, key in enumerate(keys):
+        group_idx[i] = uniq.setdefault(key, len(uniq))
+    g = len(uniq)
+    first = np.empty(g, np.int64)
+    for i in range(c - 1, -1, -1):
+        first[group_idx[i]] = i
+    costs_u = costs_cells[first]
+    fno_u = fno_cells[first]
+    with enable_x64():
+        if mesh is not None and mesh.size > 1:
+            from repro.distributed.sharding import (
+                replicate_to_mesh, shard_cells)
+            (cu, fu), _ = shard_cells([costs_u, fno_u], mesh)
+            (gi, pp), _ = shard_cells([group_idx, penalties], mesh)
+            pi_d = replicate_to_mesh(pi, mesh)
+            nu_d = replicate_to_mesh(nu, mesh)
+        else:
+            cu = jnp.asarray(costs_u)
+            fu = jnp.asarray(fno_u)
+            gi = jnp.asarray(group_idx)
+            pp = jnp.asarray(penalties)
+            pi_d = jnp.asarray(pi)
+            nu_d = jnp.asarray(nu)
+        out = np.asarray(_cells_tables_kernel(cu, fu, gi, pp, pi_d, nu_d))
+    return out[:c].reshape(c, v, k, n)
+
+
+def rho_selection_tables(costs, rhos, miss_penalty, *, allowed=None
+                         ) -> np.ndarray:
     """[B, n] float64 DS_PGM masks for an arbitrary per-request rho matrix.
 
     The pattern-grid :func:`selection_tables` covers policies whose rho is
@@ -191,15 +339,30 @@ def rho_selection_tables(costs, rhos, miss_penalty) -> np.ndarray:
     ``exp(cumsum(log .))`` prefix evaluation, no per-segment dispatch
     overhead.  Agreement with the scalar ``ds_pgm`` carries the same
     ~1e-12 near-tie caveat documented on :func:`selection_tables`.
+
+    ``allowed`` (bool [B, n], optional) restricts row b's candidates to
+    ``allowed[b]`` — the CS_FNO restriction, handled exactly like
+    ``ds_pgm_batched``'s ``fno_mask``: excluded caches sort last (key =
+    inf), can never be picked (cost = inf kills every prefix containing
+    one), and drop out of the exclusion product.
     """
     rhos = np.asarray(rhos, np.float64)
     b, n = rhos.shape
     costs = np.asarray(costs, np.float64)
     M = float(miss_penalty)
     logr = np.log(np.clip(rhos, EPS, 1.0 - EPS))
-    order = np.argsort(costs[None, :] / -logr, axis=1, kind="stable")
+    key = costs[None, :] / -logr
+    if allowed is not None:
+        allowed = np.asarray(allowed, bool)
+        key = np.where(allowed, key, np.inf)        # excluded -> last
+        logr = np.where(allowed, logr, 0.0)         # drop from the product
+    order = np.argsort(key, axis=1, kind="stable")
     flat = order + (np.arange(b) * n)[:, None]      # row-flattened gather
-    csum = np.cumsum(costs[order], axis=1)
+    if allowed is None:
+        csum = np.cumsum(costs[order], axis=1)
+    else:
+        costs_b = np.where(allowed, np.broadcast_to(costs, (b, n)), np.inf)
+        csum = np.cumsum(np.take_along_axis(costs_b, order, 1), axis=1)
     lprod = np.cumsum(logr.reshape(-1)[flat], axis=1)
     phi = csum + M * np.exp(lprod)                  # prefix costs, i = 1..n
     best = np.argmin(phi, axis=1)
@@ -237,8 +400,8 @@ def _subset_dp(costs, rhos, miss_penalty):
     return cost_m[None, :] + prod_m
 
 
-def rho_exhaustive_tables(costs, rhos, miss_penalty, *, allowed=None
-                          ) -> np.ndarray:
+def rho_exhaustive_tables(costs, rhos, miss_penalty, *, allowed=None,
+                          backend: str = "numpy") -> np.ndarray:
     """[B, n] bool masks: the exact Eq. (10) minimiser over all 2^n
     subsets for an arbitrary per-request rho matrix (n <= 16).
 
@@ -252,12 +415,23 @@ def rho_exhaustive_tables(costs, rhos, miss_penalty, *, allowed=None
     LOWEST qualifying mask, matching the scalar ascending enumeration, with
     the same ~1e-12 near-tie caveat documented on
     :func:`rho_selection_tables`.
+
+    ``backend`` selects the subset-DP evaluator: ``"numpy"`` (this module's
+    :func:`_subset_dp`, the golden oracle), ``"jax"`` or ``"pallas"``
+    (``repro.kernels.subsetdp`` — bit-exact with the oracle by
+    construction; the argmin reduction then runs on device so the
+    [B, 2^n] value matrix never comes back to the host).
     """
     rhos = np.asarray(rhos, np.float64)
     b, n = rhos.shape
     if n > 16:
         raise ValueError("rho_exhaustive_tables() limited to n <= 16")
     k = 1 << n
+    if backend != "numpy":
+        from repro.kernels.subsetdp import subset_argmin
+        best = subset_argmin(costs, rhos, miss_penalty,
+                             allowed=allowed, backend=backend)
+        return ((best[:, None] >> np.arange(n)[None, :]) & 1).astype(bool)
     phi = _subset_dp(costs, rhos, miss_penalty)
     if allowed is not None:
         bad = (np.arange(k)[None, :] & ~np.asarray(allowed, np.int64)[:, None]) != 0
@@ -270,16 +444,21 @@ def rho_exhaustive_tables(costs, rhos, miss_penalty, *, allowed=None
 
 
 def exhaustive_tables(costs, pi, nu, miss_penalty, *, fno: bool = False,
-                      chunk: int = 1 << 13) -> np.ndarray:
+                      chunk: int = None, backend: str = "numpy"
+                      ) -> np.ndarray:
     """[V, 2^n] int64 selection bitmasks over ALL indication patterns for a
-    batch of V view versions, with the EXHAUSTIVE subroutine (n <= 8).
+    batch of V view versions, with the EXHAUSTIVE subroutine
+    (n <= ``MAX_EXHAUSTIVE_TABLE_CACHES``).
 
     The exhaustive counterpart of :func:`selection_tables`: row (v, p)
     holds the Eq. (10)-optimal subset under view version v for indication
     pattern p; ``fno=True`` restricts candidates to positive-indication
     caches.  Evaluated chunk-wise so the [rows, 2^n] subset matrix stays
-    bounded; the simulator fast engine feeds its whole version history
-    here when ``alg="exhaustive"``.
+    bounded — ``chunk=None`` sizes chunks to ~``EXHAUSTIVE_CHUNK_ELEMS``
+    float64 elements, which keeps the peak working set near ~32 MB however
+    large n grows within the cap; the simulator fast engine feeds its
+    whole version history here when ``alg="exhaustive"``.  ``backend``
+    selects the subset-DP evaluator (see :func:`rho_exhaustive_tables`).
     """
     pi = np.atleast_2d(np.asarray(pi, np.float64))
     nu = np.atleast_2d(np.asarray(nu, np.float64))
@@ -288,6 +467,8 @@ def exhaustive_tables(costs, pi, nu, miss_penalty, *, fno: bool = False,
         raise ValueError(
             f"exhaustive_tables() limited to n <= {MAX_EXHAUSTIVE_TABLE_CACHES}")
     k = 1 << n
+    if chunk is None:
+        chunk = max(1, EXHAUSTIVE_CHUNK_ELEMS // k)
     pat_bits = (np.arange(k)[:, None] >> np.arange(n)[None, :]) & 1   # [K,n]
     rhos = np.where(pat_bits[None, :, :] > 0,
                     pi[:, None, :], nu[:, None, :]).reshape(v * k, n)
@@ -298,7 +479,8 @@ def exhaustive_tables(costs, pi, nu, miss_penalty, *, fno: bool = False,
         hi = min(lo + chunk, v * k)
         mask = rho_exhaustive_tables(
             costs, rhos[lo:hi], miss_penalty,
-            allowed=None if allowed is None else allowed[lo:hi])
+            allowed=None if allowed is None else allowed[lo:hi],
+            backend=backend)
         out[lo:hi] = mask @ pow2
     return out.reshape(v, k)
 
@@ -353,7 +535,48 @@ def _argmin_geometric_batched(m_eff, rho, r_max) -> np.ndarray:
     return out
 
 
-def hocs_fna_batched(n_x, n, pi, nu, miss_penalty
+def _argmin_geometric_jax(m_eff, rho, r_max):
+    """Branchless jnp mirror of :func:`_argmin_geometric_batched` — the
+    same {0, 1, floor(r*), ceil(r*), r_max} shortlist scanned ascending
+    with the same EPS strict-improvement dead-band, but expressed with
+    ``where`` lanes instead of boolean fancy-indexing so it traces into
+    one jitted grid evaluation.  Dead lanes (rho outside (EPS, 1-EPS))
+    are fed a harmless rho = 0.5 to keep every intermediate finite."""
+    m_eff = jnp.asarray(m_eff, jnp.float64)
+    rho = jnp.asarray(rho, jnp.float64)
+    r_max = jnp.asarray(r_max, jnp.int64)
+    pos = r_max > 0
+    tiny = pos & (rho <= EPS)
+    mid = pos & (rho > EPS) & (rho < 1.0 - EPS)
+    r = jnp.where(mid, rho, 0.5)
+    l = jnp.log(1.0 / r)
+    r_cont = jnp.log(jnp.maximum(m_eff * l, EPS)) / l
+    rmax_f = r_max.astype(jnp.float64)
+    cand = jnp.sort(jnp.stack(
+        [jnp.zeros_like(r_cont), jnp.ones_like(r_cont),
+         jnp.floor(r_cont), jnp.ceil(r_cont), rmax_f], axis=1), axis=1)
+    ok = (cand >= 0.0) & (cand <= rmax_f[:, None])
+    val = cand + m_eff[:, None] * r[:, None] ** cand
+    best_r = jnp.zeros_like(r_cont)
+    best_v = m_eff                        # r = 0 baseline
+    for s in range(5):                    # static shortlist, ascending
+        imp = ok[:, s] & (val[:, s] < best_v - EPS)
+        best_r = jnp.where(imp, cand[:, s], best_r)
+        best_v = jnp.where(imp, val[:, s], best_v)
+    return jnp.where(mid, best_r.astype(jnp.int64),
+                     jnp.where(tiny & (m_eff > 1.0), 1, 0))
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _hocs_fna_jit(n_x, pi, nu, m, *, n):
+    r1 = _argmin_geometric_jax(m, pi, n_x)
+    residual = m * pi ** r1
+    r0 = jnp.where(residual > 1.0,
+                   _argmin_geometric_jax(residual, nu, n - n_x), 0)
+    return r0.astype(jnp.int64), r1
+
+
+def hocs_fna_batched(n_x, n, pi, nu, miss_penalty, *, backend: str = "numpy"
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Algorithm 1, batched over requests (homogeneous parameters).
 
@@ -367,11 +590,25 @@ def hocs_fna_batched(n_x, n, pi, nu, miss_penalty
 
     ``n_x``: [B] positive-indication counts; ``pi``/``nu``/
     ``miss_penalty``: scalars or [B].  Returns (r0, r1) int64 [B].
+
+    ``backend="jax"`` evaluates the same shortlist scan as one jitted
+    x64 computation (:func:`_argmin_geometric_jax`).  Its integer
+    (r0, r1) output matches the NumPy mirror except where a shortlist
+    value ``r + m_eff * rho**r`` sits within ~1 ulp of the EPS
+    strict-improvement margin (XLA may contract that mul-into-add pair
+    into an FMA) — the same near-tie dead-band as everywhere else in the
+    fast engine; the property tests pin agreement away from it.
     """
     n_x = np.asarray(n_x, np.int64)
     pi, nu, m, n_x = np.broadcast_arrays(
         np.asarray(pi, np.float64), np.asarray(nu, np.float64),
         np.asarray(miss_penalty, np.float64), n_x)
+    if backend == "jax":
+        with enable_x64():
+            r0, r1 = _hocs_fna_jit(
+                jnp.asarray(n_x), jnp.asarray(pi), jnp.asarray(nu),
+                jnp.asarray(m), n=int(n))
+            return np.asarray(r0), np.asarray(r1)
     r1 = _argmin_geometric_batched(m, pi, n_x)
     residual = m * pi ** r1
     r0 = np.where(residual > 1.0,

@@ -236,3 +236,44 @@ def _lookup(tree, path):
         key = p.key if hasattr(p, "key") else p.idx
         node = node[key]
     return node
+
+
+# ---------------------------------------------------------------------------
+# sweep-grid cell sharding (launch.mesh.make_sweep_mesh's 1-D "cells" mesh)
+# ---------------------------------------------------------------------------
+
+def cells_sharding(mesh: Mesh, axis: str = "cells") -> NamedSharding:
+    """Row sharding along the sweep mesh's cell axis."""
+    return NamedSharding(mesh, P(axis))
+
+
+def replicate_to_mesh(x, mesh: Mesh):
+    """Place ``x`` fully replicated on every device of ``mesh`` (the
+    shared (pi, nu) view history of a sweep-grid table build).  Call
+    under the caller's ``enable_x64`` — device_put canonicalises dtypes."""
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+def shard_cells(arrays, mesh: Mesh, axis_name: str = "cells"):
+    """Row-shard a list of cell-axis arrays over a 1-D sweep mesh.
+
+    Every array's leading dim is the cell count; it is padded to a
+    multiple of the mesh size by repeating the final row (redundant work
+    on the last shard, no host-side gather logic) before ``device_put``
+    with a :func:`cells_sharding`.  Returns ``(sharded_arrays,
+    original_count)`` so callers can slice the padding back off.  Like
+    :func:`replicate_to_mesh`, call under the caller's ``enable_x64``.
+    """
+    import numpy as np
+
+    sh = cells_sharding(mesh, axis_name)
+    size = mesh.shape[axis_name]
+    count = int(np.asarray(arrays[0]).shape[0])
+    out = []
+    for a in arrays:
+        a = np.asarray(a)
+        pad = (-a.shape[0]) % size
+        if pad:
+            a = np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+        out.append(jax.device_put(a, sh))
+    return out, count

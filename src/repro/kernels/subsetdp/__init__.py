@@ -1,0 +1,10 @@
+from repro.kernels.subsetdp.ops import subset_argmin, subset_dp
+from repro.kernels.subsetdp.ref import subset_dp_ref, subset_parts_ref
+from repro.kernels.subsetdp.subsetdp import (
+    default_interpret,
+    default_row_block,
+    subset_prod_pallas,
+)
+
+__all__ = ["subset_argmin", "subset_dp", "subset_dp_ref", "subset_parts_ref",
+           "subset_prod_pallas", "default_interpret", "default_row_block"]

@@ -1,0 +1,82 @@
+"""Pure-jnp oracle for the subset-DP kernel.
+
+Computes the Eq. (10) value of EVERY subset mask m for a batch of rho
+rows: ``phi[b, m] = sum_{j in m} costs[j] + M * prod_{j in m} rhos[b, j]``.
+
+The scalar reference loop (``repro.core.exhaustive``) accumulates a
+subset's cost and exclusion product by ASCENDING cache index, and the
+NumPy DP twin (``repro.core.batched._subset_dp``) reproduces that IEEE
+operation order through its highest-set-bit recurrence.  This mirror gets
+the same order a third way: n masked multiply/add sweeps in ascending j.
+Multiplying a lane by exactly 1.0 (or adding exactly 0.0 to a
+non-negative partial sum) is an IEEE identity, so lanes whose bit j is
+clear pass through unchanged and every lane ends up with precisely the
+ascending-index product/sum chain of its set bits — bit-exact with both
+twins, but expressed as O(n) vectorised sweeps instead of a 2^n-step
+serial recurrence.  The Pallas kernel (``subsetdp.py``) tiles the product
+sweep over row blocks.
+
+BIT-EXACTNESS vs XLA FMA CONTRACTION: the one place the subset value
+mixes a multiply into an add is the final ``cost + prod``.  Inside a
+single jitted computation XLA:CPU contracts that pair into an FMA (single
+rounding — off by one ulp from the oracle's two roundings, and no flag or
+optimization barrier reliably prevents it).  The product sweep is muls
+and selects only and the cost sweep adds only, so each is contraction-
+free; :func:`subset_parts_ref` therefore returns them SEPARATELY and the
+caller performs the final add outside the jitted computation (NumPy, or a
+second jit whose inputs they are), which rounds exactly like the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def subset_cost_ref(costs, n: int):
+    """[1, 2^n] per-subset cost sums, ascending-index add order."""
+    k = 1 << n
+    costs = jnp.asarray(costs)
+    dtype = costs.dtype
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    cost = jnp.zeros((1, k), dtype)
+    zero = jnp.asarray(0.0, dtype)
+    for j in range(n):
+        bit = ((lanes >> j) & 1) == 1
+        cost = cost + jnp.where(bit, costs[j], zero)
+    return cost
+
+
+def subset_prod_ref(rhos, miss_penalty):
+    """[B, 2^n] per-subset exclusion products (times M), ascending-index
+    multiply order — the kernel's oracle."""
+    rhos = jnp.asarray(rhos)
+    b, n = rhos.shape
+    k = 1 << n
+    dtype = rhos.dtype
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    prod = jnp.full((b, k), miss_penalty, dtype)
+    one = jnp.asarray(1.0, dtype)
+    for j in range(n):              # static unroll: ascending-index order
+        bit = ((lanes >> j) & 1) == 1
+        prod = prod * jnp.where(bit, rhos[:, j][:, None], one)
+    return prod
+
+
+def subset_parts_ref(costs, rhos, miss_penalty):
+    """(cost [1, 2^n], prod [B, 2^n]) — add them OUTSIDE this computation
+    for bit-exactness with ``_subset_dp`` (see module docstring)."""
+    rhos = jnp.asarray(rhos)
+    n = rhos.shape[1]
+    return subset_cost_ref(jnp.asarray(costs, rhos.dtype), n), \
+        subset_prod_ref(rhos, miss_penalty)
+
+
+def subset_dp_ref(costs, rhos, miss_penalty):
+    """[B, 2^n] Eq. (10) subset values (jnp; dtype follows ``rhos``).
+
+    Bit-exact with ``repro.core.batched._subset_dp`` when evaluated
+    EAGERLY; if traced into a larger jit, XLA may contract the final add
+    into an FMA (use :func:`subset_parts_ref` there instead).
+    """
+    cost, prod = subset_parts_ref(costs, rhos, miss_penalty)
+    return cost + prod

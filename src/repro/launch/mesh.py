@@ -34,3 +34,28 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def data_axes(mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_sweep_mesh(*, max_devices: int = None):
+    """1-D ("cells",) mesh over the local devices for sweep-grid table
+    builds (``cachesim.sweep.run_grid(backend="jax")``): decision cells
+    are row-sharded along it, the shared view history replicated.
+
+    Returns None with <= 1 visible device — the sweep path then runs the
+    same jitted computation unsharded, so single-device CI needs no
+    special casing.  CPU hosts can fake a multi-device mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` set before
+    any jax import.
+    """
+    devices = jax.devices()
+    if max_devices is not None:
+        devices = devices[:max_devices]
+    n = len(devices)
+    if n <= 1:
+        return None
+    try:
+        return jax.make_mesh((n,), ("cells",), devices=devices)
+    except TypeError:  # older jax without the devices kwarg
+        import numpy as np
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(devices), ("cells",))

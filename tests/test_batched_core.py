@@ -11,6 +11,8 @@ from repro.core.batched import (
     exclusions,
     hit_from_q,
     hocs_fna_batched,
+    rho_selection_tables,
+    selection_tables,
 )
 from repro.core.model import exclusion_probabilities, hit_ratio_from_q
 from repro.core.policies import hocs_fna
@@ -81,3 +83,58 @@ def test_hocs_batched_matches_scalar():
         for i in range(16):
             assert (int(r0_b[i]), int(r1_b[i])) == \
                 hocs_fna(int(nx[i]), n, pi, nu, M), (pi, nu, int(nx[i]))
+
+
+def test_selection_tables_numpy_backend_supports_fno():
+    """``backend="numpy"`` used to raise on ``fno=True``; the per-row
+    ``allowed`` mask of ``rho_selection_tables`` now expresses the CS_FNO
+    restriction, matching the JAX backend on every (version, pattern)
+    row (seeded draws away from the near-tie dead-band)."""
+    rng = np.random.default_rng(5)
+    for _ in range(10):
+        n = int(rng.integers(1, 7))
+        v = int(rng.integers(1, 6))
+        costs = rng.uniform(0.05, 5.0, n)
+        pi = rng.uniform(0.0, 1.0, (v, n))
+        nu = rng.uniform(0.0, 1.0, (v, n))
+        M = float(rng.uniform(1.5, 1000.0))
+        for fno in (False, True):
+            a = selection_tables(costs, pi, nu, M, fno=fno, backend="numpy")
+            b = selection_tables(costs, pi, nu, M, fno=fno, backend="jax")
+            assert np.array_equal(a, b), (n, v, M, fno)
+            if fno:
+                # the restriction really bites: no mask ever selects a
+                # negative-indication cache
+                k = 1 << n
+                pats = ((np.arange(k)[:, None] >> np.arange(n)[None, :])
+                        & 1).astype(bool)
+                assert not np.any(a & ~pats[None, :, :])
+
+
+def test_rho_selection_tables_allowed_empty_rows():
+    """An all-False ``allowed`` row (a pattern with no positive
+    indications under CS_FNO) must yield the empty selection, not NaNs
+    or a spurious pick."""
+    costs = np.array([1.0, 2.0, 3.0])
+    rhos = np.array([[0.5, 0.5, 0.5], [0.2, 0.9, 0.4]])
+    allowed = np.array([[False, False, False], [True, False, True]])
+    mask = rho_selection_tables(costs, rhos, 100.0, allowed=allowed)
+    assert not mask[0].any()
+    assert not mask[1, 1]
+
+
+def test_hocs_batched_jax_backend_matches_numpy():
+    """The jitted shortlist scan reproduces the NumPy mirror's integer
+    (r0, r1) grid (seeded draws; dead-band divergence needs the
+    continuous optimum within ~1 ulp of an integer, which these draws
+    never hit)."""
+    rng = np.random.default_rng(6)
+    n = 9
+    nx = rng.integers(0, n + 1, 256)
+    pi = rng.uniform(0.0, 1.0, 256)
+    nu = rng.uniform(0.0, 1.0, 256)
+    m = rng.uniform(1.5, 1000.0, 256)
+    r0a, r1a = hocs_fna_batched(nx, n, pi, nu, m)
+    r0b, r1b = hocs_fna_batched(nx, n, pi, nu, m, backend="jax")
+    assert np.array_equal(r0a, r0b)
+    assert np.array_equal(r1a, r1b)

@@ -58,13 +58,19 @@ def test_registry_dispatch():
     assert _plan_name(policy="fna_cal", alg="exhaustive") == "fna_cal"
     assert _plan_name(policy="fna", alg="exhaustive", n_caches=4) == \
         "exhaustive"
-    # the generic scalar fallback: exhaustive past its batched budget
-    assert _plan_name(policy="fna", alg="exhaustive", n_caches=9) == "scalar"
-    assert _plan_name(policy="fno", alg="exhaustive", n_caches=9) == "scalar"
+    # the chunked batched build covers the full table budget (n <= 12):
+    # configurations that used to fall through to the scalar loop at
+    # 8 < n <= 12 now dispatch to the batched enumeration
+    assert _plan_name(policy="fna", alg="exhaustive", n_caches=9) == \
+        "exhaustive"
+    assert _plan_name(policy="fno", alg="exhaustive", n_caches=12) == \
+        "exhaustive"
+    assert _plan_name(policy="fna_cal", alg="exhaustive", n_caches=9) == \
+        "fna_cal"
     # out of every budget -> reference loop
     assert _plan_name(policy="fna", n_caches=13) is None
     assert _plan_name(policy="pi", n_caches=13) is None
-    assert _plan_name(policy="fna_cal", alg="exhaustive", n_caches=9) is None
+    assert _plan_name(policy="fna_cal", alg="exhaustive", n_caches=13) is None
 
 
 def test_register_provider_shadows_builtin():

@@ -301,6 +301,60 @@ def test_batched_fna_cal_bridge_tables_match_scalar_mask_rows(inst):
         assert ex_tab[p] == exhaustive_mask(costs, rhos, M), (p, inst)
 
 
+@st.composite
+def rho_matrix_instances(draw, max_n=5, max_b=6):
+    n = draw(st.integers(1, max_n))
+    b = draw(st.integers(1, max_b))
+    cost_st = st.floats(0.05, 5.0, allow_nan=False, allow_infinity=False)
+    costs = draw(st.lists(cost_st, min_size=n, max_size=n))
+    rows = st.lists(rhos_st, min_size=n, max_size=n)
+    rhos = draw(st.lists(rows, min_size=b, max_size=b))
+    allowed = draw(st.lists(st.lists(st.booleans(), min_size=n, max_size=n),
+                            min_size=b, max_size=b))
+    M = draw(st.floats(1.5, 1_000.0, allow_nan=False, allow_infinity=False))
+    return costs, rhos, allowed, M
+
+
+def _restricted_row_safe(costs, rhos, allowed, M) -> bool:
+    sub = [j for j in range(len(costs)) if allowed[j]]
+    if not sub:
+        return True                    # empty candidate set: both pick {}
+    return _ds_pgm_row_safe([costs[j] for j in sub],
+                            [rhos[j] for j in sub], M)
+
+
+@settings(max_examples=200, deadline=None)
+@given(rho_matrix_instances())
+def test_rho_selection_tables_matches_ds_pgm_batched_x64(inst):
+    """The NumPy float64 mirror and the jitted x64 ``ds_pgm_batched``
+    agree EXACTLY on every row away from the ~1e-12 near-tie dead-band —
+    the contract that lets the fast engine route any table build through
+    either backend.  Checked with and without the CS_FNO candidate
+    restriction (``allowed`` mask vs ``fno_mask``)."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.batched import ds_pgm_batched, rho_selection_tables
+    costs, rhos, allowed, M = inst
+    for row, arow in zip(rhos, allowed):
+        hyp.assume(_ds_pgm_row_safe(costs, row, M))
+        hyp.assume(_restricted_row_safe(costs, row, arow, M))
+    costs_a = np.asarray(costs, np.float64)
+    rhos_a = np.asarray(rhos, np.float64)
+    allow_a = np.asarray(allowed, bool)
+    with enable_x64():
+        free = np.asarray(ds_pgm_batched(
+            jnp.asarray(costs_a), jnp.asarray(rhos_a), float(M)))
+        restricted = np.asarray(ds_pgm_batched(
+            jnp.asarray(costs_a), jnp.asarray(rhos_a), float(M),
+            fno_mask=jnp.asarray(allow_a.astype(np.int64))))
+    assert np.array_equal(
+        rho_selection_tables(costs_a, rhos_a, M), free), inst
+    assert np.array_equal(
+        rho_selection_tables(costs_a, rhos_a, M, allowed=allow_a),
+        restricted), inst
+
+
 @settings(max_examples=300, deadline=None)
 @given(zero_fn_views())
 def test_cs_fna_degenerates_to_cs_fno_without_false_negatives(case):
