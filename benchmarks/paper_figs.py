@@ -30,6 +30,7 @@ import argparse
 import csv
 import dataclasses
 import json
+import os
 import sys
 import time
 from pathlib import Path
@@ -308,14 +309,17 @@ def run_scenario_pipeline(name: str, *, smoke: bool = False,
                           engine: str = "fast",
                           trace_file: Optional[str] = None,
                           trace_format: Optional[str] = None,
-                          key_column: Optional[str] = None) -> dict:
+                          key_column: Optional[str] = None,
+                          store=None, workers: int = 0) -> dict:
     """Run one scenario end-to-end and write the requested artifacts.
     Returns ``{"scenario", "records", "seconds", "paths"}``.
 
     ``trace_file`` replays the scenario's grid on an external request log
     (wiki/CDN shape; see ``repro.cachesim.tracefiles``) instead of the
     declared workloads; ``trace_format``/``key_column`` are its loader
-    knobs."""
+    knobs.  ``store``/``workers`` are the artifact-store root and
+    phase-1 process-pool size passed to the grid runner (see
+    ``repro.cachesim.store``)."""
     sc = get_scenario(name)
     if trace_file is not None:
         sc = _rebind_traces(sc, trace_file, trace_format, key_column)
@@ -329,7 +333,8 @@ def run_scenario_pipeline(name: str, *, smoke: bool = False,
     # smoke runs the golden sub-grid: it is sized to stay non-degenerate
     # at a few thousand requests, where the display grid's long cadences
     # would produce all-miss cells
-    records = run_scenario(sc, n_requests=n_req, engine=engine, golden=smoke)
+    records = run_scenario(sc, n_requests=n_req, engine=engine, golden=smoke,
+                           store=store, workers=workers)
     dt = time.time() - t0
     # loader catalog/working-set stats (Sec. V-B) of any file-backed
     # workloads, at the subsample length that actually ran — the run
@@ -425,7 +430,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--key-column", default=None, metavar="COL",
                     help="--trace-file CSV key column: 0-based index or "
                          "header name (default 0)")
+    ap.add_argument("--store", default=os.environ.get("REPRO_STORE") or None,
+                    metavar="DIR",
+                    help="content-addressed artifact store root: sweeps/"
+                         "decision tables persist here and repeated runs "
+                         "hydrate instead of recomputing (default: the "
+                         "REPRO_STORE environment variable)")
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="compute independent system-key groups' sweeps "
+                         "in an N-process pool (bit-identical to serial)")
     args = ap.parse_args(argv)
+    if args.store:
+        # trace parse caches join the same root (tracefiles reads the env)
+        os.environ["REPRO_STORE"] = args.store
     if args.trace_file is None and (args.trace_format or args.key_column):
         ap.error("--trace-format/--key-column require --trace-file")
 
@@ -462,7 +479,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             out_dir=Path(args.out), write_json=args.json,
             write_csv=args.csv, write_plot=args.plot, engine=args.engine,
             trace_file=args.trace_file, trace_format=args.trace_format,
-            key_column=args.key_column)
+            key_column=args.key_column, store=args.store,
+            workers=args.workers)
         print(_summary_line(out, get_scenario(name).axis))
     return 0
 

@@ -118,6 +118,13 @@ def sim_jax_benches(full: bool):
     return run_jax_benches(full)
 
 
+def sim_store_benches(full: bool):
+    """Artifact-store perf tier: warm-store speedup on the Fig. 3 grid
+    (CI-gated >= 5x) and the parallel phase-1 farm speedup (recorded)."""
+    from benchmarks.sim import run_store_benches
+    return run_store_benches(full)
+
+
 def serving_bench(full: bool):
     out = []
     try:
@@ -147,6 +154,7 @@ def main() -> None:
         "kernels": lambda full: kernel_benches(full, interpret=interpret),
         "sim": sim_benches,
         "sim_jax": sim_jax_benches,
+        "sim_store": sim_store_benches,
         "serving": serving_bench,
     }
     records = []

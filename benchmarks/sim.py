@@ -21,6 +21,14 @@ CI gates this >= 1), the device-sharding efficiency of the same build
 (``sweep_shard_efficiency``), and the Pallas subset-DP kernel in
 interpret mode with an inline bit-exactness assert against the NumPy
 oracle (``sim_subsetdp_pallas_interpret``).
+
+``run_store_benches`` (section ``sim_store``) covers the artifact-store
+perf tier (``repro.cachesim.store``): ``sweep_store_warm_speedup`` — the
+Fig. 3 penalty grid cold vs warm-store, with an inline bit-identity
+assert between the two grids (CI gates this >= 5) — and
+``sweep_parallel_speedup`` — a 4-group system axis serial vs
+``run_grid(workers=4)``, fresh store per measurement (recorded, not
+gated: spawn + import overhead makes it machine-dependent).
 """
 from __future__ import annotations
 
@@ -214,4 +222,90 @@ def run_jax_benches(full: bool):
     dt = (time.time() - t0) / iters
     out.append(("sim_subsetdp_pallas_interpret", dt / b_dp * 1e6,
                 b_dp / dt, {"rows": b_dp, "n_caches": n_dp}))
+    return out
+
+
+def run_store_benches(full: bool):
+    """Artifact-store rows (section ``sim_store``); see the module
+    docstring.  Both rows use throwaway store roots, so the benchmark
+    never reads from — or pollutes — a developer's ``REPRO_STORE``."""
+    import os
+    import shutil
+    import tempfile
+
+    from repro.cachesim import ArtifactStore, SimConfig, get_trace
+    from repro.cachesim.sweep import run_grid
+
+    out = []
+    # --- warm-store speedup on the Fig. 3 penalty axis over a 6-cache
+    # fleet (the Fig. 7 scale): one sweep + one stacked 2^6-pattern
+    # table build cold, pure hydrate + replay warm.  The CI gate (>= 5x)
+    # is the acceptance criterion for the store actually paying for
+    # itself; locally this lands >= 12x, so the gate has headroom for
+    # shared-runner noise -----------------------------------------------
+    n_req = 100_000 if full else 50_000
+    traces = {"gradle": get_trace("gradle", n_req, seed=0)}
+    base = SimConfig(engine="fast", update_interval=200, n_caches=6,
+                     costs=(2.0,) * 6)
+    policies = ("fna", "fno")
+
+    def _time_grid(store=None):
+        t0 = time.time()
+        grid = run_grid(traces, base, "miss_penalty", DECISION_PENALTIES,
+                        policies=policies, store=store)
+        return time.time() - t0, grid
+
+    _time_grid()                                              # warm caches
+    dt_cold, grid_cold = min((_time_grid() for _ in range(2)),
+                             key=lambda r: r[0])
+    root = tempfile.mkdtemp(prefix="repro-bench-store-")
+    try:
+        store = ArtifactStore(root)
+        _time_grid(store)                                     # populate
+        dt_warm, grid_warm = min((_time_grid(store) for _ in range(2)),
+                                 key=lambda r: r[0])
+        assert grid_warm == grid_cold, \
+            "store-hydrated grid drifted off cold compute"
+        cells = len(DECISION_PENALTIES) * len(policies)
+        out.append(("sweep_store_warm_speedup",
+                    dt_warm / (n_req * cells) * 1e6, dt_cold / dt_warm,
+                    {"n_requests": n_req, "cells": len(DECISION_PENALTIES),
+                     "policies": len(policies),
+                     "sweep_hits": store.stats["sweep_hits"],
+                     "sweep_misses": store.stats["sweep_misses"],
+                     "table_hits": store.stats["table_hits"],
+                     "table_misses": store.stats["table_misses"]}))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    # --- parallel phase-1 farm: 4 independent system-key groups, serial
+    # vs a 4-process spawn pool; every measurement gets a FRESH store so
+    # both sides always compute all 4 sweeps ----------------------------
+    n_par = 100_000 if full else 50_000
+    par_traces = {"gradle": get_trace("gradle", n_par, seed=0)}
+    intervals = (100, 200, 400, 800)
+    # floor 2 so the spawn-pool path always runs (on a 1-core box the
+    # row then records the farm's overhead, which is the honest number)
+    workers = max(2, min(4, os.cpu_count() or 1))
+
+    def _time_parallel(w: int):
+        root = tempfile.mkdtemp(prefix="repro-bench-par-")
+        try:
+            t0 = time.time()
+            grid = run_grid(par_traces, base, "update_interval", intervals,
+                            policies=policies, store=ArtifactStore(root),
+                            workers=w)
+            return time.time() - t0, grid
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+
+    dt_ser, grid_ser = min((_time_parallel(0) for _ in range(2)),
+                           key=lambda r: r[0])
+    dt_par, grid_par = min((_time_parallel(workers) for _ in range(2)),
+                           key=lambda r: r[0])
+    assert grid_par == grid_ser, "parallel grid drifted off serial"
+    out.append(("sweep_parallel_speedup",
+                dt_par / (n_par * len(intervals)) * 1e6, dt_ser / dt_par,
+                {"n_requests": n_par, "groups": len(intervals),
+                 "workers": workers}))
     return out

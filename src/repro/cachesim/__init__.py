@@ -32,6 +32,7 @@ from repro.cachesim.scenarios import (
     run_scenario,
 )
 from repro.cachesim.simulator import SimConfig, SimResult, Simulator, run_policies
+from repro.cachesim.store import ArtifactStore
 from repro.cachesim.sweep import run_grid, run_sweep, sweep_records
 from repro.cachesim.systemstate import SystemTrace
 from repro.cachesim.tracefiles import (
@@ -42,7 +43,8 @@ from repro.cachesim.tracefiles import (
 )
 from repro.cachesim.traces import get_trace, TRACES
 
-__all__ = ["LRUCache", "SimConfig", "SimResult", "Simulator", "SystemTrace",
+__all__ = ["ArtifactStore",
+           "LRUCache", "SimConfig", "SimResult", "Simulator", "SystemTrace",
            "Scenario", "SCENARIOS", "GOLDEN_SCENARIOS", "get_scenario",
            "list_scenarios", "run_scenario", "run_policies", "run_grid",
            "run_sweep", "sweep_records", "get_trace", "TRACES",

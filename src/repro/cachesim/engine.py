@@ -337,25 +337,103 @@ def plan_for(cfg) -> Optional[DecisionPlan]:
 # Cross-cell sharing for decision-side sweep axes
 # ---------------------------------------------------------------------------
 
+def table_keys_for(cfgs: Sequence, policies: Sequence[str]):
+    """Every distinct ``plan_cache`` key a (cells x policies) panel will
+    consult, in first-use order — the preload/flush manifest of the
+    artifact store (``repro.cachesim.store``)."""
+    keys = []
+    seen = set()
+    for cfg in cfgs:
+        for p in policies:
+            pcfg = dataclasses.replace(cfg, policy=p)
+            plan = plan_for(pcfg)
+            if not isinstance(plan, TablePlan):
+                continue
+            key = plan.cache_key(pcfg)
+            if key not in seen:
+                seen.add(key)
+                keys.append(key)
+    return keys
+
+
+def _plan_jobs(system, cfgs, policies, plan_cls):
+    """Unseeded (cache key, configured pcfg) pairs dispatching to
+    ``plan_cls``, deduplicated in first-use order."""
+    jobs = []
+    seen = set()
+    for cfg in cfgs:
+        for p in policies:
+            pcfg = dataclasses.replace(cfg, policy=p)
+            plan = plan_for(pcfg)
+            if type(plan) is not plan_cls:
+                continue
+            key = plan.cache_key(pcfg)
+            if key in system.plan_cache or key in seen:
+                continue
+            seen.add(key)
+            jobs.append((key, pcfg))
+    return jobs
+
+
+def _prefetch_exhaustive(system, cfgs, policies) -> None:
+    """Stack exhaustive-subroutine table builds across decision cells:
+    one chunked subset-DP pass per (costs, fno) group covers every
+    penalty cell (``repro.core.batched.exhaustive_tables_cells``), so a
+    penalty grid pays the 2^n enumeration once instead of per cell."""
+    from repro.core.batched import exhaustive_tables_cells
+    groups: Dict[tuple, list] = {}
+    for key, pcfg in _plan_jobs(system, cfgs, policies, ExhaustiveTables):
+        groups.setdefault((tuple(pcfg.costs), pcfg.policy == "fno"),
+                          []).append((key, float(pcfg.miss_penalty)))
+    for (costs, fno), jobs in groups.items():
+        if len(jobs) < 2:    # a single build gains nothing from stacking
+            continue
+        tabs = exhaustive_tables_cells(
+            list(costs), system.pi_v, system.nu_v,
+            [m for _, m in jobs], fno=fno)
+        for (key, _), tab in zip(jobs, tabs):
+            system.plan_cache[key] = tab.reshape(-1)
+
+
+def _prefetch_hocs(system, cfgs, policies) -> None:
+    """Stack HOCS table builds across decision cells: the pooled
+    estimates are penalty-independent, so one
+    ``repro.core.batched.hocs_selection_tables_cells`` call covers every
+    penalty cell of the group."""
+    from repro.core.batched import hocs_selection_tables_cells
+    jobs = _plan_jobs(system, cfgs, policies, HocsTables)
+    if len(jobs) < 2:        # a single build gains nothing from stacking
+        return
+    tabs = hocs_selection_tables_cells(
+        system.pi_v, system.nu_v, [pcfg.miss_penalty for _, pcfg in jobs])
+    for (key, _), tab in zip(jobs, tabs):
+        system.plan_cache[key] = tab.reshape(-1)
+
+
 def prefetch_tables(system, cfgs: Sequence, policies: Sequence[str],
                     *, backend: str = "numpy", mesh=None) -> None:
-    """Stack every ds_pgm-family (cell, policy) table build of a
-    decision-side group into ONE batched
-    ``repro.core.batched.selection_tables_cells`` call, seeding
-    ``system.plan_cache`` so the per-cell replays become pure lookups.
+    """Stack every stackable (cell, policy) table build of a decision-
+    side group into one batched call per provider family, seeding
+    ``system.plan_cache`` so the per-cell replays become pure lookups:
+    ds_pgm via ``repro.core.batched.selection_tables_cells``, the
+    exhaustive subroutine via ``exhaustive_tables_cells`` (per (costs,
+    fno) group), and HOCS via ``hocs_selection_tables_cells``.
 
-    Row-level independence of ``ds_pgm_batched`` makes each stacked slice
-    bit-identical to the per-cell build it replaces.
+    Row-level independence of each batched builder makes every stacked
+    slice bit-identical to the per-cell build it replaces.
 
-    ``backend="jax"`` routes the stacked build through the jitted
+    ``backend="jax"`` routes the ds_pgm stacked build through the jitted
     ``selection_tables_cells_jax`` kernel instead — optionally sharded
     over the cell axis of ``mesh`` (``launch.mesh.make_sweep_mesh``).
     Unlike the NumPy path it stacks even a SINGLE job: the jit dispatch
     is the same either way, and seeding the cache keeps every cell's
     tables on the one compiled path.  Masks can differ from the NumPy
     build only inside the ~1e-12 near-tie dead-band (FMA contraction;
-    see ``selection_tables_cells_jax``).
+    see ``selection_tables_cells_jax``).  The exhaustive/HOCS stacks
+    always evaluate on the NumPy oracle.
     """
+    _prefetch_exhaustive(system, cfgs, policies)
+    _prefetch_hocs(system, cfgs, policies)
     ds_plan = next(p for p in PROVIDERS if isinstance(p, DsPgmTables))
     jobs = []                # (cache key, costs, penalty, fno)
     seen = set()
@@ -394,7 +472,7 @@ def prefetch_tables(system, cfgs: Sequence, policies: Sequence[str],
 
 def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
               share_system: bool = True, *, backend: str = "numpy",
-              mesh=None) -> List[Dict]:
+              mesh=None, store=None) -> List[Dict]:
     """Run a policy panel over several decision-side cells that share one
     system evolution; returns ``[{policy: SimResult}]`` aligned with
     ``cfgs``.
@@ -407,18 +485,33 @@ def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
     ``share_system=False`` forces independent full runs (benchmarking the
     amortisation itself); the reference engine always runs full.
 
+    ``store`` (an ``ArtifactStore``, a root path, or None) consults the
+    content-addressed artifact store (``repro.cachesim.store``) before
+    the sweep: a hit hydrates the stored ``SystemTrace`` (bit-identical
+    replay) instead of computing, a miss computes and persists it.
+    Decision tables are preloaded from the store under the same (trace
+    digest, system key) and any freshly built ones are flushed back
+    after the replays — on the NumPy backend only, so stored tables are
+    always golden-oracle output (a JAX run still loads and benefits
+    from them; its near-tie dead-band is documented in
+    ``docs/engine.md``).
+
     ``backend="jax"`` builds the stacked tables with the jitted
     (optionally device-sharded) kernel — ``mesh=None`` auto-creates the
     sweep mesh when more than one device is visible (see
     :func:`prefetch_tables`).  The replay phase is unchanged either way.
     """
     from repro.cachesim.simulator import Simulator
+    from repro.cachesim.store import as_store
     from repro.cachesim.systemstate import SystemTrace
     trace = np.asarray(trace, dtype=np.uint64)
     out: List[Dict] = [dict() for _ in cfgs]
     system = None
     share = share_system and bool(cfgs) and trace.shape[0] > 0 and \
         all(cfg.engine == "fast" for cfg in cfgs)
+    store = as_store(store) if share else None
+    digest = None
+    preloaded = set()
     if backend == "jax" and mesh is None:
         from repro.launch.mesh import make_sweep_mesh
         mesh = make_sweep_mesh()
@@ -427,8 +520,21 @@ def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
             plan_for(dataclasses.replace(cfg, policy=p)) is not None
             for cfg in cfgs for p in policies)
         if fastable:
-            donor = Simulator(cfgs[0])
-            system = SystemTrace.compute(donor, trace)
+            sys_key = SystemTrace.system_key(cfgs[0])
+            if store is not None:
+                digest = store.trace_digest(trace)
+                system = store.load_sweep(trace, sys_key,
+                                          trace_digest=digest)
+            if system is None:
+                system = SystemTrace.compute(Simulator(cfgs[0]), trace)
+                if store is not None:
+                    store.save_sweep(system, trace_digest=digest)
+            if store is not None and backend == "numpy":
+                for key in table_keys_for(cfgs, policies):
+                    tab = store.load_table(digest, sys_key, key)
+                    if tab is not None:
+                        system.plan_cache[key] = tab
+                        preloaded.add(key)
             prefetch_tables(system, cfgs, policies,
                             backend=backend, mesh=mesh)
     for ci, cfg in enumerate(cfgs):
@@ -438,4 +544,11 @@ def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
                                  system=system if share_system else None)
             if share_system and system is None:
                 system = getattr(sim, "last_system", None)
+    # flush tables built this run (prefetched or replay-built) so the
+    # next warm run starts with every lookup already on disk
+    if store is not None and digest is not None and \
+            system is not None and backend == "numpy":
+        for key, tab in system.plan_cache.items():
+            if key not in preloaded:
+                store.save_table(digest, system.key, key, tab)
     return out

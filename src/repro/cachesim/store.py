@@ -1,0 +1,258 @@
+"""Content-addressed artifact store: never compute the same sweep twice.
+
+The fast engine's expensive phase is the policy-independent system sweep
+(:class:`~repro.cachesim.systemstate.SystemTrace`); decision tables are
+second.  Both are pure functions of durable inputs — the request trace's
+BYTES and the ``SystemTrace.system_key`` configuration tuple (plus, for
+tables, the provider's decision-side ``cache_key``) — so repeated figure
+runs, CI golden jobs, and a fleet of sweep workers can share one artifact
+pool instead of recomputing (ROADMAP item 5).
+
+Key anatomy
+-----------
+An entry's filename is ``sha256(meta)`` of a human-readable meta string::
+
+    v<SCHEMA_VERSION>|sweep|<trace sha256>|<repr(system_key)>
+    v<SCHEMA_VERSION>|table|<trace sha256>|<repr(system_key)>|<repr(table_key)>
+
+so any input change — a single trace byte, any system-side config field,
+a decision-side table key, or the serialisation schema itself — lands on
+a different filename and the old entry is simply never consulted again.
+The meta string is also stored INSIDE the ``.npz`` payload and verified
+on load, so a hash collision or a foreign file in the store directory
+reads as a miss, never as wrong data.
+
+Layout and durability
+---------------------
+::
+
+    <root>/sweeps/<digest>.npz   SystemTrace snapshots (see
+                                 SystemTrace.to_arrays: per-request
+                                 arrays, view-version history, quality
+                                 counters, final-state snapshot)
+    <root>/tables/<digest>.npz   plan_cache decision tables ([V * 2^n]
+                                 int64 selection bitmasks)
+    <root>/traces/               the tracefiles.py parse cache (same
+                                 filename scheme as next-to-source)
+
+Writes are atomic (``os.replace`` of a same-directory temp file), so a
+concurrent reader — or a second writer racing on the same entry — never
+observes a partial archive; last writer wins with identical content.
+A corrupt or truncated entry is treated as a miss, unlinked best-effort,
+and rebuilt from scratch.
+
+Hydrated sweeps replay **bit-identically** to cold compute: the replay
+phase consumes exactly the arrays the store round-trips (float64/int64
+binary, no text formatting), and the golden-scenario suite in
+``tests/test_store.py`` asserts it across every scenario x policy.
+
+``REPRO_STORE`` (environment) names a default root for the CLI and the
+tracefiles parse cache; library callers pass a root or an
+:class:`ArtifactStore` explicitly (``run_grid(store=...)``).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import zipfile
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple, Union
+
+import numpy as np
+
+#: bumped whenever the serialised layout (SystemTrace.to_arrays schema,
+#: table payload shape) changes — old entries then miss by construction
+SCHEMA_VERSION = 1
+
+#: environment variable naming the default store root (CLI + tracefiles)
+ENV_VAR = "REPRO_STORE"
+
+
+def default_root() -> Optional[Path]:
+    """The ``REPRO_STORE`` root, or None when unset/empty."""
+    root = os.environ.get(ENV_VAR, "").strip()
+    return Path(root) if root else None
+
+
+def as_store(store) -> Optional["ArtifactStore"]:
+    """Normalise a ``store=`` argument: None passes through, a path
+    becomes an :class:`ArtifactStore`, a store is returned as-is."""
+    if store is None or isinstance(store, ArtifactStore):
+        return store
+    return ArtifactStore(store)
+
+
+class ArtifactStore:
+    """One store root; see the module docstring for the layout/keying."""
+
+    def __init__(self, root: Union[str, Path]):
+        self.root = Path(root)
+        #: observability counters (benchmarks record them per run)
+        self.stats: Dict[str, int] = {
+            "sweep_hits": 0, "sweep_misses": 0,
+            "table_hits": 0, "table_misses": 0,
+            "writes": 0, "corrupt_dropped": 0,
+        }
+
+    def __repr__(self) -> str:
+        return f"ArtifactStore({str(self.root)!r})"
+
+    # -- keying ------------------------------------------------------------
+
+    @staticmethod
+    def trace_digest(trace: np.ndarray) -> str:
+        """SHA-256 of the trace CONTENT in the engine's canonical dtype
+        (uint64, the form ``run_cells`` hands to the sweep) — workers and
+        parents hash identical bytes regardless of the caller's dtype."""
+        arr = np.ascontiguousarray(np.asarray(trace), np.uint64)
+        return hashlib.sha256(arr.tobytes()).hexdigest()
+
+    @staticmethod
+    def sweep_meta(trace_digest: str, system_key: tuple) -> str:
+        return f"v{SCHEMA_VERSION}|sweep|{trace_digest}|{system_key!r}"
+
+    @staticmethod
+    def table_meta(trace_digest: str, system_key: tuple,
+                   table_key: tuple) -> str:
+        return (f"v{SCHEMA_VERSION}|table|{trace_digest}|"
+                f"{system_key!r}|{table_key!r}")
+
+    def _path(self, kind: str, meta: str) -> Path:
+        digest = hashlib.sha256(meta.encode()).hexdigest()
+        return self.root / f"{kind}s" / f"{digest}.npz"
+
+    @property
+    def traces_dir(self) -> Path:
+        """Where the tracefiles parse cache lives under this root."""
+        return self.root / "traces"
+
+    # -- low-level entry IO ------------------------------------------------
+
+    def _write(self, path: Path, arrays: Dict[str, np.ndarray],
+               meta: str) -> None:
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            tmp = path.with_name(f".{path.name}.tmp{os.getpid()}")
+            # uncompressed: sweeps are large and mostly incompressible
+            # bool/float arrays; load speed is the whole point
+            with open(tmp, "wb") as f:
+                np.savez(f, __meta__=np.asarray(meta), **arrays)
+            os.replace(tmp, path)        # atomic: readers never see partial
+            self.stats["writes"] += 1
+        except OSError:
+            pass                         # read-only root etc.: best-effort
+
+    def _read(self, path: Path, meta: str) -> Optional[Dict[str, np.ndarray]]:
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                if str(z["__meta__"]) != meta:
+                    return None          # foreign/colliding entry: miss
+                return {k: z[k] for k in z.files if k != "__meta__"}
+        except FileNotFoundError:
+            return None
+        except (OSError, KeyError, ValueError, zipfile.BadZipFile):
+            # corrupt / truncated: drop so the rebuild can land cleanly
+            self.stats["corrupt_dropped"] += 1
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return None
+
+    # -- sweeps ------------------------------------------------------------
+
+    def has_sweep(self, trace_digest: str, system_key: tuple) -> bool:
+        """Cheap existence probe (no load/verify) — the parallel runner
+        uses it to skip farming already-stored groups."""
+        return self._path("sweep",
+                          self.sweep_meta(trace_digest, system_key)).exists()
+
+    def load_sweep(self, trace: np.ndarray, system_key: tuple, *,
+                   trace_digest: Optional[str] = None):
+        """The stored :class:`SystemTrace` for (trace bytes, system_key),
+        hydrated against ``trace``, or None on a miss."""
+        from repro.cachesim.systemstate import SystemTrace
+        if trace_digest is None:
+            trace_digest = self.trace_digest(trace)
+        meta = self.sweep_meta(trace_digest, system_key)
+        arrays = self._read(self._path("sweep", meta), meta)
+        if arrays is None:
+            self.stats["sweep_misses"] += 1
+            return None
+        self.stats["sweep_hits"] += 1
+        return SystemTrace.from_arrays(arrays, key=system_key, trace=trace)
+
+    def save_sweep(self, st, *, trace_digest: Optional[str] = None) -> None:
+        """Persist one computed sweep (its ``plan_cache`` tables are
+        separate artifacts — see :meth:`save_table`)."""
+        if trace_digest is None:
+            trace_digest = self.trace_digest(st._trace)
+        meta = self.sweep_meta(trace_digest, st.key)
+        self._write(self._path("sweep", meta), st.to_arrays(), meta)
+
+    # -- decision tables ---------------------------------------------------
+
+    def load_table(self, trace_digest: str, system_key: tuple,
+                   table_key: tuple) -> Optional[np.ndarray]:
+        meta = self.table_meta(trace_digest, system_key, table_key)
+        arrays = self._read(self._path("table", meta), meta)
+        if arrays is None:
+            self.stats["table_misses"] += 1
+            return None
+        self.stats["table_hits"] += 1
+        return np.ascontiguousarray(arrays["table"], np.int64)
+
+    def save_table(self, trace_digest: str, system_key: tuple,
+                   table_key: tuple, table: np.ndarray) -> None:
+        meta = self.table_meta(trace_digest, system_key, table_key)
+        self._write(self._path("table", meta),
+                    {"table": np.asarray(table, np.int64)}, meta)
+
+    # -- maintenance (tools/store_tool.py) ---------------------------------
+
+    def entries(self) -> List[Tuple[Path, str, int, float]]:
+        """Every stored artifact as (path, kind, size bytes, mtime),
+        oldest first — traces/ parse caches included."""
+        out = []
+        for kind in ("sweeps", "tables", "traces"):
+            d = self.root / kind
+            if not d.is_dir():
+                continue
+            for p in sorted(d.iterdir()):
+                if p.name.startswith(".") or not p.is_file():
+                    continue
+                st = p.stat()
+                out.append((p, kind, st.st_size, st.st_mtime))
+        out.sort(key=lambda e: e[3])
+        return out
+
+    def verify(self) -> Iterator[Tuple[Path, bool]]:
+        """Yield (path, ok) per entry: ok means the archive opens and its
+        arrays load (traces/ entries are checked as archives only — their
+        keying lives in ``tracefiles``)."""
+        for path, _, _, _ in self.entries():
+            ok = True
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    for k in z.files:
+                        z[k]
+            except (OSError, KeyError, ValueError, zipfile.BadZipFile):
+                ok = False
+            yield path, ok
+
+    def gc(self, max_bytes: int) -> List[Path]:
+        """Delete oldest entries (by mtime) until the store fits in
+        ``max_bytes``; returns the deleted paths."""
+        entries = self.entries()
+        total = sum(size for _, _, size, _ in entries)
+        deleted = []
+        for path, _, size, _ in entries:
+            if total <= max_bytes:
+                break
+            try:
+                path.unlink()
+                total -= size
+                deleted.append(path)
+            except OSError:
+                pass
+        return deleted

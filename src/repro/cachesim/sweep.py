@@ -38,12 +38,27 @@ Swept fields split into two kinds, classified per cell by
     (:func:`repro.cachesim.engine.run_cells`).  The paper's Fig. 3
     penalty grid thus costs one sweep per trace instead of one per cell.
 
+:func:`run_grid` also carries the perf tier on top of the grouping:
+
+  * ``store=`` consults the content-addressed artifact store
+    (``repro.cachesim.store``) so repeated grid runs never recompute a
+    (trace bytes x system key) sweep or its decision tables;
+  * ``workers=N`` runs the independent system-key groups' PHASE-1 sweeps
+    in a spawn-based process pool, with the store as the cross-process
+    hand-off: workers persist sweeps, then the ordinary serial pass runs
+    entirely warm — so the parallel path is bit-identical to the serial
+    one by construction (the replays are the same code on the same
+    hydrated artifacts).  With no ``store`` given, a temporary store
+    scoped to the call is used.
+
 :func:`run_sweep` is the ``update_interval`` special case (Figs. 4-6),
 kept as the stable entry point for benchmarks and tests.
 """
 from __future__ import annotations
 
 import dataclasses
+import shutil
+import tempfile
 from typing import Dict, List, Mapping, Sequence, Tuple, Union
 
 import numpy as np
@@ -88,6 +103,43 @@ def cell_label(axis: str, value):
     return hashable_label(value)
 
 
+def _sweep_worker(store_root: str, trace: np.ndarray, cfg) -> str:
+    """Process-pool job: compute ONE system-key group's sweep and persist
+    it to the shared store (the cross-process hand-off).  Module-level so
+    the spawn context can pickle it; returns "hit"/"computed" for
+    observability.  Workers never ship a SystemTrace back — the parent's
+    serial pass hydrates from the store, which is what makes the
+    parallel path bit-identical to the serial one."""
+    from repro.cachesim.simulator import Simulator
+    from repro.cachesim.store import ArtifactStore
+    store = ArtifactStore(store_root)
+    trace = np.asarray(trace, dtype=np.uint64)
+    digest = ArtifactStore.trace_digest(trace)
+    key = SystemTrace.system_key(cfg)
+    if store.has_sweep(digest, key):
+        return "hit"
+    st = SystemTrace.compute(Simulator(cfg), trace)
+    store.save_sweep(st, trace_digest=digest)
+    return "computed"
+
+
+def _farm_sweeps(jobs, store, workers: int) -> None:
+    """Run the phase-1 sweep jobs ``[(trace, cfg)]`` across a spawn-based
+    process pool, persisting each into ``store``.  spawn (not fork): the
+    parent may hold a live XLA client, which is not fork-safe; workers
+    only run the NumPy sweep phase anyway."""
+    import multiprocessing
+    from concurrent.futures import ProcessPoolExecutor
+    ctx = multiprocessing.get_context("spawn")
+    root = str(store.root)
+    with ProcessPoolExecutor(max_workers=min(workers, len(jobs)),
+                             mp_context=ctx) as pool:
+        futs = [pool.submit(_sweep_worker, root, trace, cfg)
+                for trace, cfg in jobs]
+        for f in futs:
+            f.result()      # propagate worker failures loudly
+
+
 def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
              base: SimConfig,
              axis: str,
@@ -97,6 +149,8 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
              share_system: bool = True,
              backend: str = "numpy",
              mesh=None,
+             store=None,
+             workers: int = 0,
              ) -> Dict[CellKey, Dict[str, SimResult]]:
     """Run a policy grid over an arbitrary system axis; returns
     ``{(trace_name, label): {policy: SimResult}}``.
@@ -106,6 +160,14 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
     at ``n_requests`` with ``base.seed``.  ``share_system=False`` forces
     per-policy full runs (benchmarking the amortisation itself).
 
+    ``store`` (an ``ArtifactStore``, a root path, or None) persists and
+    reuses sweeps/tables content-addressed on (trace bytes x system key)
+    — see ``repro.cachesim.store``.  ``workers=N`` (N > 1) additionally
+    computes the independent system-key groups' sweeps in an N-process
+    spawn pool first, handing them off through the store (a temporary
+    one when none is given); the subsequent serial pass then runs warm,
+    so results are bit-identical to ``workers=0``.
+
     ``backend="jax"`` builds each group's stacked decision tables with
     the jitted kernel, sharding the cell axis across the devices of
     ``mesh`` (auto-created when None and more than one device is
@@ -113,15 +175,16 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
     the returned results are unchanged up to the ~1e-12 near-tie
     dead-band on table masks.
     """
-    from repro.cachesim.engine import run_cells
+    from repro.cachesim.engine import plan_for, run_cells
+    from repro.cachesim.store import as_store
     if not isinstance(traces, Mapping):
         traces = {name: get_trace(name, n_requests, seed=base.seed)
                   for name in traces}
-    out: Dict[CellKey, Dict[str, SimResult]] = {}
+    # classify cells by the policy-independent system key: cells of a
+    # decision-side axis all share one key (and thus ONE SystemTrace
+    # per trace); system-side cells each form their own group
+    per_trace: List[Tuple[str, np.ndarray, List[CellKey], Dict]] = []
     for name, trace in traces.items():
-        # classify cells by the policy-independent system key: cells of a
-        # decision-side axis all share one key (and thus ONE SystemTrace
-        # per trace); system-side cells each form their own group
         order: List[CellKey] = []
         groups: Dict[tuple, List[Tuple[CellKey, SimConfig]]] = {}
         for value in values:
@@ -135,16 +198,49 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
             cfg = dataclasses.replace(base, **cell_overrides(axis, value))
             groups.setdefault(SystemTrace.system_key(cfg),
                               []).append((key, cfg))
-        results: Dict[CellKey, Dict[str, SimResult]] = {}
-        for cells in groups.values():
-            group_out = run_cells(trace, [cfg for _, cfg in cells],
-                                  policies, share_system=share_system,
-                                  backend=backend, mesh=mesh)
-            for (key, _), cell_res in zip(cells, group_out):
-                results[key] = cell_res
-        for key in order:       # keep the caller's cell order
-            out[key] = results[key]
-    return out
+        per_trace.append((name, trace, order, groups))
+
+    store = as_store(store)
+    tmp_root = None
+    try:
+        if workers > 1 and share_system:
+            if store is None:
+                # the hand-off needs SOME shared medium; scope it to the call
+                tmp_root = tempfile.mkdtemp(prefix="repro-store-")
+                store = as_store(tmp_root)
+            # one phase-1 job per (trace, group) whose sweep the serial
+            # pass below would compute and that isn't already stored
+            jobs = []
+            for name, trace, _, groups in per_trace:
+                tr = np.asarray(trace, dtype=np.uint64)
+                digest = store.trace_digest(tr)
+                for sys_key, cells in groups.items():
+                    cfgs = [cfg for _, cfg in cells]
+                    sweepable = all(cfg.engine == "fast" for cfg in cfgs) \
+                        and tr.shape[0] > 0 and any(
+                            plan_for(dataclasses.replace(cfg, policy=p))
+                            is not None for cfg in cfgs for p in policies)
+                    if sweepable and not store.has_sweep(digest, sys_key):
+                        jobs.append((tr, cfgs[0]))
+            if len(jobs) > 1:   # a 1-job farm is just spawn overhead
+                _farm_sweeps(jobs, store, workers)
+
+        out: Dict[CellKey, Dict[str, SimResult]] = {}
+        for name, trace, order, groups in per_trace:
+            results: Dict[CellKey, Dict[str, SimResult]] = {}
+            for cells in groups.values():
+                group_out = run_cells(trace, [cfg for _, cfg in cells],
+                                      policies, share_system=share_system,
+                                      backend=backend, mesh=mesh,
+                                      store=store)
+                for (key, _), cell_res in zip(cells, group_out):
+                    results[key] = cell_res
+            for key in order:       # keep the caller's cell order
+                out[key] = results[key]
+        return out
+    finally:
+        if tmp_root is not None:
+            shutil.rmtree(tmp_root, ignore_errors=True)
 
 
 def run_sweep(traces: Union[Mapping[str, np.ndarray], Sequence[str]],

@@ -43,6 +43,10 @@ from repro.core import hash_indices
 # incremented on every full system sweep (amortisation observability)
 SWEEPS_COMPUTED = 0
 
+#: the fixed field order quality counters serialise under (store schema)
+_QUALITY_KEYS = ("fn_events", "fn_opportunities", "fp_events",
+                 "fp_opportunities", "resident")
+
 
 def _dedup_rows(rows: np.ndarray) -> np.ndarray:
     """Unique indices per row, flattened.  The reference CBF update uses
@@ -350,6 +354,112 @@ class SystemTrace:
                 "positives": qe._positives, "boot": qe._bootstrapped,
             } for qe in sim.q_est],
         }
+
+    # -- serialisation (the content-addressed artifact store) --------------
+
+    def to_arrays(self) -> Dict[str, np.ndarray]:
+        """Flatten the sweep into named ndarrays — the ``.npz`` payload of
+        ``repro.cachesim.store``.  Everything a replay consumes round-trips
+        bit-exactly: per-request arrays as-is, the view-version history as
+        float64, the final-state snapshot as concatenated per-node arrays
+        plus length vectors (node counts / bitmap sizes may vary).  The
+        trace itself is NOT stored — the store keys entries on its content
+        hash, so :meth:`from_arrays` re-attaches the caller's array.
+        ``plan_cache`` tables are stored as separate per-key artifacts."""
+        fs = self.final_state
+        nodes, qs = fs["nodes"], fs["q"]
+
+        def _cat(parts, dtype):
+            parts = [np.asarray(p, dtype) for p in parts]
+            return (np.concatenate(parts) if parts
+                    else np.empty(0, dtype)), \
+                np.asarray([p.shape[0] for p in parts], np.int64)
+
+        lru_cat, lru_len = _cat([nd["lru_keys"] for nd in nodes], np.uint64)
+        cnt_cat, cnt_len = _cat([nd["counters"] for nd in nodes], np.uint8)
+        stale_cat, stale_len = _cat([nd["stale"] for nd in nodes], bool)
+        return {
+            "n": np.int64(self.n), "trace_len": np.int64(self.trace_len),
+            "from_fresh": np.bool_(self.from_fresh),
+            "ind_all": self.ind_all, "in_dj": self.in_dj,
+            "dj_all": self.dj_all, "pats": self.pats,
+            "ver_per_req": self.ver_per_req,
+            "pi_v": self.pi_v, "nu_v": self.nu_v,
+            "fp_v": self.fp_v, "fn_v": self.fn_v,
+            "quality": np.asarray([self.quality[k] for k in _QUALITY_KEYS],
+                                  np.int64),
+            "node_lru": lru_cat, "node_lru_len": lru_len,
+            "node_counters": cnt_cat, "node_counters_len": cnt_len,
+            "node_stale": stale_cat, "node_stale_len": stale_len,
+            "node_fp_est": np.asarray([nd["fp_est"] for nd in nodes],
+                                      np.float64),
+            "node_fn_est": np.asarray([nd["fn_est"] for nd in nodes],
+                                      np.float64),
+            "node_version": np.asarray([nd["version"] for nd in nodes],
+                                       np.int64),
+            "node_since_adv": np.asarray([nd["since_adv"] for nd in nodes],
+                                         np.int64),
+            "node_since_est": np.asarray([nd["since_est"] for nd in nodes],
+                                         np.int64),
+            "q_q": np.asarray([q["q"] for q in qs], np.float64),
+            "q_version": np.asarray([q["version"] for q in qs], np.int64),
+            "q_count": np.asarray([q["count"] for q in qs], np.int64),
+            "q_positives": np.asarray([q["positives"] for q in qs], np.int64),
+            "q_boot": np.asarray([q["boot"] for q in qs], bool),
+        }
+
+    @classmethod
+    def from_arrays(cls, arrays, key: tuple,
+                    trace: np.ndarray) -> "SystemTrace":
+        """Rebuild a sweep from :meth:`to_arrays` output.  ``key`` is the
+        ``system_key`` the store looked the entry up under, ``trace`` the
+        caller's (content-hash-verified) request array — the hydrated
+        sweep replays bit-identically to the one :meth:`compute` built."""
+        def _split(cat, lens):
+            out, lo = [], 0
+            for ln in np.asarray(lens, np.int64).tolist():
+                out.append(cat[lo:lo + ln])
+                lo += ln
+            return out
+
+        lrus = _split(arrays["node_lru"], arrays["node_lru_len"])
+        cnts = _split(arrays["node_counters"], arrays["node_counters_len"])
+        stales = _split(arrays["node_stale"], arrays["node_stale_len"])
+        n_nodes = len(lrus)
+        final_state = {
+            "nodes": [{
+                "lru_keys": lrus[j].tolist(),
+                "counters": np.ascontiguousarray(cnts[j], np.uint8),
+                "stale": np.ascontiguousarray(stales[j], bool),
+                "fp_est": float(arrays["node_fp_est"][j]),
+                "fn_est": float(arrays["node_fn_est"][j]),
+                "version": int(arrays["node_version"][j]),
+                "since_adv": int(arrays["node_since_adv"][j]),
+                "since_est": int(arrays["node_since_est"][j]),
+            } for j in range(n_nodes)],
+            "q": [{
+                "q": float(arrays["q_q"][j]),
+                "version": int(arrays["q_version"][j]),
+                "count": int(arrays["q_count"][j]),
+                "positives": int(arrays["q_positives"][j]),
+                "boot": bool(arrays["q_boot"][j]),
+            } for j in range(int(np.asarray(arrays["q_q"]).shape[0]))],
+        }
+        quality = {k: int(v) for k, v in
+                   zip(_QUALITY_KEYS, np.asarray(arrays["quality"]))}
+        return cls(
+            key=key, n=int(arrays["n"]), trace_len=int(arrays["trace_len"]),
+            ind_all=np.ascontiguousarray(arrays["ind_all"], bool),
+            in_dj=np.ascontiguousarray(arrays["in_dj"], bool),
+            dj_all=np.ascontiguousarray(arrays["dj_all"], np.int64),
+            pats=np.ascontiguousarray(arrays["pats"], np.int64),
+            ver_per_req=np.ascontiguousarray(arrays["ver_per_req"], np.int64),
+            pi_v=np.ascontiguousarray(arrays["pi_v"], np.float64),
+            nu_v=np.ascontiguousarray(arrays["nu_v"], np.float64),
+            fp_v=np.ascontiguousarray(arrays["fp_v"], np.float64),
+            fn_v=np.ascontiguousarray(arrays["fn_v"], np.float64),
+            quality=quality, final_state=final_state,
+            from_fresh=bool(arrays["from_fresh"]), _trace=trace)
 
     # -- reuse -------------------------------------------------------------
 

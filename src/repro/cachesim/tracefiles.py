@@ -29,11 +29,15 @@ Ingestion pipeline
      deterministic, so the same file always yields the same array (the
      simulator hashes ids for placement, so dense ids lose nothing and
      keep memory bounded);
-  3. cache the remapped array as ``<path>.<options-digest>.npz`` next
-     to the source (one cache file per parse-option set), keyed by the
-     source's SHA-256 — a million-request log parses once; the cache
-     survives ``touch`` (content hash, not mtime) and invalidates
-     itself the moment the file's bytes change;
+  3. cache the remapped array as ``<path>.<options-digest>.npz`` (one
+     cache file per parse-option set), keyed by the source's SHA-256 —
+     a million-request log parses once; the cache survives ``touch``
+     (content hash, not mtime) and invalidates itself the moment the
+     file's bytes change.  The cache lives next to the source by
+     default; when ``REPRO_STORE`` is set it lives under the artifact
+     store's ``traces/`` directory instead (fixing read-only source
+     checkouts), with the next-to-source location kept as a read
+     fallback so pre-existing caches still hit;
   4. optionally subsample: ``stride`` keeps every stride-th request,
      then ``head`` truncates — so a golden/smoke run can take a short
      but structure-preserving prefix of a long log.
@@ -249,6 +253,25 @@ def _cache_path(path: Path, cache_dir: Optional[Union[str, Path]],
     return path.with_name(name)
 
 
+def _cache_candidates(path: Path, cache_dir: Optional[Union[str, Path]],
+                      parse_key: str) -> list:
+    """Cache locations in read/write preference order.  An explicit
+    ``cache_dir`` wins outright; otherwise a ``REPRO_STORE`` root (its
+    ``traces/`` subdirectory) is preferred, with the legacy
+    next-to-source location as read fallback (pre-existing caches still
+    hit) and write fallback (read-only store root).  Filename + keying
+    are identical everywhere, so entries relocate freely."""
+    if cache_dir is not None:
+        return [_cache_path(path, cache_dir, parse_key)]
+    from repro.cachesim.store import default_root
+    out = []
+    root = default_root()
+    if root is not None:
+        out.append(_cache_path(path, root / "traces", parse_key))
+    out.append(_cache_path(path, None, parse_key))
+    return out
+
+
 def _load_cached(cache: Path, digest: str, parse_key: str
                  ) -> Optional[np.ndarray]:
     try:
@@ -261,7 +284,7 @@ def _load_cached(cache: Path, digest: str, parse_key: str
 
 
 def _write_cache(cache: Path, digest: str, parse_key: str,
-                 ids: np.ndarray) -> None:
+                 ids: np.ndarray) -> bool:
     try:
         cache.parent.mkdir(parents=True, exist_ok=True)
         tmp = cache.with_name(f".{cache.name}.tmp{os.getpid()}.npz")
@@ -269,8 +292,9 @@ def _write_cache(cache: Path, digest: str, parse_key: str,
                             parse_key=np.asarray(parse_key))
         # atomic replace: a concurrent reader never sees a partial archive
         os.replace(tmp, cache)
+        return True
     except OSError:
-        pass          # read-only checkout etc. — caching is best-effort
+        return False  # read-only location — caller may try a fallback
 
 
 # ---------------------------------------------------------------------------
@@ -287,11 +311,13 @@ def load_trace_file(path: Union[str, Path], *, fmt: Optional[str] = None,
     """Load one request log into the simulator's ``np.int64`` contract.
 
     Parsing + dense remapping run once per file CONTENT (SHA-256-keyed
-    ``.npz`` cache, written next to the source unless ``cache_dir`` is
-    given); subsampling (``stride`` then ``head``) is a cheap slice of
-    the cached full array, so every (head, stride) view of one log
-    shares one parse.  ``with_info=True`` additionally returns the
-    :class:`TraceInfo` of the returned (post-subsample) array.
+    ``.npz`` cache; location per :func:`_cache_candidates` — explicit
+    ``cache_dir``, else the ``REPRO_STORE`` root's ``traces/``, else
+    next to the source); subsampling (``stride`` then ``head``) is a
+    cheap slice of the cached full array, so every (head, stride) view
+    of one log shares one parse.  ``with_info=True`` additionally
+    returns the :class:`TraceInfo` of the returned (post-subsample)
+    array.
     """
     path = Path(path)
     if not path.exists():
@@ -302,16 +328,21 @@ def load_trace_file(path: Union[str, Path], *, fmt: Optional[str] = None,
     parse_key = f"v1:{fmt}:{key_column}:{delimiter}"
     ids = None
     digest = None
-    cpath = _cache_path(path, cache_dir, parse_key)
+    candidates = _cache_candidates(path, cache_dir, parse_key)
     if cache:
         digest = file_sha256(path)
-        if cpath.exists():
-            ids = _load_cached(cpath, digest, parse_key)
+        for cpath in candidates:
+            if cpath.exists():
+                ids = _load_cached(cpath, digest, parse_key)
+                if ids is not None:
+                    break
     if ids is None:
         ids = parse_trace_file(path, fmt=fmt, key_column=key_column,
                                delimiter=delimiter)
         if cache:
-            _write_cache(cpath, digest, parse_key, ids)
+            for cpath in candidates:
+                if _write_cache(cpath, digest, parse_key, ids):
+                    break
     n_file = int(ids.shape[0])
     out = ids[::stride] if stride > 1 else ids
     if head is not None:

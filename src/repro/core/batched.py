@@ -384,6 +384,11 @@ def _subset_dp(costs, rhos, miss_penalty):
     bit does: ``m`` strips to ``m ^ (1 << hb)``, whose own value was built
     in the same ascending order, and appends the one multiply/add the
     scalar loop performs last.
+
+    ``miss_penalty`` is a scalar or a [B] per-row array (the stacked
+    cross-cell build feeds one penalty per row) — the seeded product is
+    the only place it enters, so per-row values keep every row's IEEE
+    operation order identical to its scalar-penalty evaluation.
     """
     rhos = np.asarray(rhos, np.float64)
     b, n = rhos.shape
@@ -391,7 +396,7 @@ def _subset_dp(costs, rhos, miss_penalty):
     costs = np.asarray(costs, np.float64)
     cost_m = np.zeros(k, np.float64)
     prod_m = np.empty((b, k), np.float64)
-    prod_m[:, 0] = float(miss_penalty)
+    prod_m[:, 0] = np.asarray(miss_penalty, np.float64)
     for m in range(1, k):
         hb = m.bit_length() - 1
         rest = m ^ (1 << hb)
@@ -428,6 +433,9 @@ def rho_exhaustive_tables(costs, rhos, miss_penalty, *, allowed=None,
         raise ValueError("rho_exhaustive_tables() limited to n <= 16")
     k = 1 << n
     if backend != "numpy":
+        if np.ndim(miss_penalty):
+            raise ValueError(
+                "per-row miss_penalty requires backend='numpy'")
         from repro.kernels.subsetdp import subset_argmin
         best = subset_argmin(costs, rhos, miss_penalty,
                              allowed=allowed, backend=backend)
@@ -483,6 +491,50 @@ def exhaustive_tables(costs, pi, nu, miss_penalty, *, fno: bool = False,
             backend=backend)
         out[lo:hi] = mask @ pow2
     return out.reshape(v, k)
+
+
+def exhaustive_tables_cells(costs, pi, nu, penalties, *, fno: bool = False,
+                            chunk: int = None) -> np.ndarray:
+    """[C, V, 2^n] stacked exhaustive tables for C decision cells sharing
+    one (costs, fno) but differing in miss penalty — the cross-cell
+    prefetch of a penalty-axis sweep (``repro.cachesim.engine``).
+
+    One chunked subset-DP pass covers every (cell, version, pattern) row:
+    the rho matrix is penalty-independent, so it is materialised once and
+    fancy-indexed per chunk, with the per-row penalty entering only as
+    the seeded product of :func:`_subset_dp`.  Each cell's slice is
+    bit-identical to the per-cell :func:`exhaustive_tables` call it
+    replaces (rows are evaluated independently; chunk boundaries don't
+    enter the arithmetic), and the peak working set stays at the same
+    ~``EXHAUSTIVE_CHUNK_ELEMS`` bound however many cells stack.
+    """
+    pi = np.atleast_2d(np.asarray(pi, np.float64))
+    nu = np.atleast_2d(np.asarray(nu, np.float64))
+    v, n = pi.shape
+    if n > MAX_EXHAUSTIVE_TABLE_CACHES:
+        raise ValueError(
+            f"exhaustive_tables_cells() limited to "
+            f"n <= {MAX_EXHAUSTIVE_TABLE_CACHES}")
+    penalties = np.asarray(penalties, np.float64)
+    c = penalties.shape[0]
+    k = 1 << n
+    if chunk is None:
+        chunk = max(1, EXHAUSTIVE_CHUNK_ELEMS // k)
+    pat_bits = (np.arange(k)[:, None] >> np.arange(n)[None, :]) & 1   # [K,n]
+    rhos = np.where(pat_bits[None, :, :] > 0,
+                    pi[:, None, :], nu[:, None, :]).reshape(v * k, n)
+    allowed = np.tile(np.arange(k, dtype=np.int64), v) if fno else None
+    pow2 = (1 << np.arange(n)).astype(np.int64)
+    total = c * v * k
+    out = np.empty(total, np.int64)
+    for lo in range(0, total, chunk):
+        idx = np.arange(lo, min(lo + chunk, total))
+        sub = idx % (v * k)             # the shared rho/allowed row
+        mask = rho_exhaustive_tables(
+            costs, rhos[sub], penalties[idx // (v * k)],
+            allowed=None if allowed is None else allowed[sub])
+        out[idx[0]:idx[-1] + 1] = mask @ pow2
+    return out.reshape(c, v, k)
 
 
 def cs_fna_batched(indications, costs, q, fp, fn, miss_penalty) -> jax.Array:
@@ -616,20 +668,26 @@ def hocs_fna_batched(n_x, n, pi, nu, miss_penalty, *, backend: str = "numpy"
     return r0.astype(np.int64), r1
 
 
-def hocs_selection_tables(pi_v, nu_v, miss_penalty) -> np.ndarray:
-    """[V, 2^n] int64 HOCS selection bitmasks over ALL indication
-    patterns for a batch of V view versions.
+def hocs_selection_tables_cells(pi_v, nu_v, penalties) -> np.ndarray:
+    """[C, V, 2^n] int64 HOCS selection bitmasks for C decision cells
+    (one miss penalty each) sharing one view history — the cross-cell
+    prefetch of a penalty-axis sweep (``repro.cachesim.engine``).
 
     Mirrors the reference loop exactly: per-version pooled estimates are
     LEFT-TO-RIGHT sums over caches (np.sum pairwise-accumulates for
-    n >= 8, which can differ in the last ulp), the (r0*, r1*) grid is one
-    :func:`hocs_fna_batched` call over every (version, popcount) pair,
-    and row (v, p) accesses the r1* cheapest positive-indication caches
-    plus the r0* cheapest negative ones (ascending cache index — the
-    homogeneous setting has no cost order).
+    n >= 8, which can differ in the last ulp), computed ONCE (they are
+    penalty-independent); the (r0*, r1*) grid is one
+    :func:`hocs_fna_batched` call over every (cell, version, popcount)
+    triple; and row (c, v, p) accesses the r1* cheapest positive-
+    indication caches plus the r0* cheapest negative ones (ascending
+    cache index — the homogeneous setting has no cost order).  The
+    shortlist scan is elementwise per row, so each cell's slice is
+    bit-identical to a per-cell call.
     """
     pi_v = np.atleast_2d(np.asarray(pi_v, np.float64))
     nu_v = np.atleast_2d(np.asarray(nu_v, np.float64))
+    penalties = np.asarray(penalties, np.float64)
+    c = penalties.shape[0]
     v, n = pi_v.shape
     k = 1 << n
     acc_pi = np.zeros(v, np.float64)
@@ -642,10 +700,12 @@ def hocs_selection_tables(pi_v, nu_v, miss_penalty) -> np.ndarray:
     # (r0*, r1*) depends on the pattern only through its popcount
     nx = np.arange(n + 1, dtype=np.int64)
     r0g, r1g = hocs_fna_batched(
-        np.tile(nx, v), n, np.repeat(pi_h, n + 1), np.repeat(nu_h, n + 1),
-        float(miss_penalty))
-    r0g = r0g.reshape(v, n + 1)
-    r1g = r1g.reshape(v, n + 1)
+        np.tile(nx, c * v), n,
+        np.tile(np.repeat(pi_h, n + 1), c),
+        np.tile(np.repeat(nu_h, n + 1), c),
+        np.repeat(penalties, v * (n + 1)))
+    r0g = r0g.reshape(c * v, n + 1)
+    r1g = r1g.reshape(c * v, n + 1)
     bits = ((np.arange(k)[:, None] >> np.arange(n)[None, :]) & 1
             ).astype(np.int64)                                    # [K, n]
     pow2 = (1 << np.arange(n)).astype(np.int64)
@@ -659,4 +719,13 @@ def hocs_selection_tables(pi_v, nu_v, miss_penalty) -> np.ndarray:
     popc = bits.sum(axis=1)                                       # [K]
     rows = np.arange(k)[None, :]
     sel = low_set[rows, r1g[:, popc]] | low_clr[rows, r0g[:, popc]]
-    return sel.astype(np.int64)
+    return sel.astype(np.int64).reshape(c, v, k)
+
+
+def hocs_selection_tables(pi_v, nu_v, miss_penalty) -> np.ndarray:
+    """[V, 2^n] int64 HOCS selection bitmasks over ALL indication
+    patterns for a batch of V view versions — the single-cell view of
+    :func:`hocs_selection_tables_cells` (same code path, so the stacked
+    prefetch and the per-cell provider build cannot drift apart)."""
+    return hocs_selection_tables_cells(
+        pi_v, nu_v, [float(miss_penalty)])[0]

@@ -30,7 +30,10 @@ from repro.cachesim.engine import (
 from repro.cachesim.sweep import axis_column, sweep_records
 from repro.core.batched import (
     exhaustive_tables,
+    exhaustive_tables_cells,
     hocs_fna_batched,
+    hocs_selection_tables,
+    hocs_selection_tables_cells,
     selection_tables,
     selection_tables_cells,
 )
@@ -159,6 +162,53 @@ def test_selection_tables_cells_chunked_matches_unchunked():
     full = selection_tables_cells(costs, pi, nu, pens, fnos)
     tiny = selection_tables_cells(costs, pi, nu, pens, fnos, max_rows=1)
     assert np.array_equal(full, tiny)
+
+
+def test_exhaustive_tables_cells_bit_identical_to_per_cell():
+    """The stacked subset-DP build (per-row penalty seeded into the DP
+    product) must reproduce each per-cell exhaustive_tables call exactly
+    — rows are independent and the penalty enters only the seed, so the
+    IEEE operation order per row is unchanged."""
+    rng = np.random.default_rng(5)
+    n, v = 3, 11
+    pi = rng.uniform(0.0, 1.0, (v, n))
+    nu = rng.uniform(0.0, 1.0, (v, n))
+    costs = rng.uniform(0.5, 5.0, n).tolist()
+    pens = [10.0, 50.0, 100.0, 400.0, 900.0]
+    for fno in (False, True):
+        stacked = exhaustive_tables_cells(costs, pi, nu, pens, fno=fno)
+        assert stacked.shape == (len(pens), v, 1 << n)
+        for i, m in enumerate(pens):
+            assert np.array_equal(
+                stacked[i], exhaustive_tables(costs, pi, nu, m, fno=fno)), \
+                (fno, i)
+
+
+def test_exhaustive_tables_cells_chunked_matches_unchunked():
+    rng = np.random.default_rng(6)
+    n, v = 3, 4
+    pi = rng.uniform(0.0, 1.0, (v, n))
+    nu = rng.uniform(0.0, 1.0, (v, n))
+    costs = rng.uniform(0.5, 5.0, n).tolist()
+    pens = [25.0, 100.0, 500.0]
+    full = exhaustive_tables_cells(costs, pi, nu, pens)
+    tiny = exhaustive_tables_cells(costs, pi, nu, pens, chunk=1)
+    assert np.array_equal(full, tiny)
+
+
+def test_hocs_selection_tables_cells_matches_single_cell():
+    """The C-cell tiling (np.tile/np.repeat row layout) must place each
+    penalty's rows exactly where the single-cell build computes them."""
+    rng = np.random.default_rng(7)
+    n, v = 4, 9
+    pi = rng.uniform(0.0, 1.0, (v, n))
+    nu = rng.uniform(0.0, 1.0, (v, n))
+    pens = [10.0, 75.0, 300.0, 1000.0]
+    stacked = hocs_selection_tables_cells(pi, nu, pens)
+    assert stacked.shape == (len(pens), v, 1 << n)
+    for i, m in enumerate(pens):
+        assert np.array_equal(stacked[i],
+                              hocs_selection_tables(pi, nu, m)), i
 
 
 # ---------------------------------------------------------------------------
