@@ -188,6 +188,15 @@ def derived_fig7(records, axis="n_caches") -> float:
     return gap
 
 
+def derived_advert(records, axis="advert_bandwidth") -> float:
+    """Cost of starving advertisement (the arXiv:2104.01386 Pareto
+    trade-off): FNA cost at the tightest bandwidth budget over the most
+    generous one (> 1 — staleness costs surface as the self-adjusting
+    policy's token bucket runs dry)."""
+    cells = sorted(pivot_cells(records, axis), key=lambda c: c[axis])
+    return cells[0]["cost"]["fna"] / cells[-1]["cost"]["fna"]
+
+
 #: legacy figure name -> (scenario names, derived metric)
 FIG_SCENARIOS: Dict[str, Tuple[Tuple[str, ...], object]] = {
     "fig1_fn_ratio": (("fig1_staleness", "fig1_staleness_tight"),
@@ -198,6 +207,7 @@ FIG_SCENARIOS: Dict[str, Tuple[Tuple[str, ...], object]] = {
                              "fig5_indicator_size_fresh"), derived_fig5),
     "fig6_cache_size": (("fig6_cache_size",), derived_fig6),
     "fig7_num_caches": (("fig7_num_caches",), derived_fig7),
+    "advert_bandwidth": (("advert_budget",), derived_advert),
 }
 
 

@@ -125,6 +125,14 @@ def sim_store_benches(full: bool):
     return run_store_benches(full)
 
 
+def sim_advert_benches(full: bool):
+    """Advertisement-event subsystem: cost-vs-bandwidth Pareto rows for
+    the self-adjusting policy vs a budget-matched fixed cadence (the
+    ``advert_bandwidth_pareto`` summary is CI-gated >= 1)."""
+    from benchmarks.sim import run_advert_benches
+    return run_advert_benches(full)
+
+
 def serving_bench(full: bool):
     out = []
     try:
@@ -155,6 +163,7 @@ def main() -> None:
         "sim": sim_benches,
         "sim_jax": sim_jax_benches,
         "sim_store": sim_store_benches,
+        "sim_advert": sim_advert_benches,
         "serving": serving_bench,
     }
     records = []

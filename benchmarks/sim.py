@@ -29,6 +29,15 @@ assert between the two grids (CI gates this >= 5) — and
 ``sweep_parallel_speedup`` — a 4-group system axis serial vs
 ``run_grid(workers=4)``, fresh store per measurement (recorded, not
 gated: spawn + import overhead makes it machine-dependent).
+
+``run_advert_benches`` (section ``sim_advert``) covers the
+advertisement-event subsystem (``repro.cachesim.advert``): per-bandwidth
+``advert_pareto_bw*`` rows compare the self-adjusting policy's cost
+against a fixed-cadence baseline advertising the SAME per-cache event
+count (equal bytes-on-wire budget — both send full bitmaps), and the
+``advert_bandwidth_pareto`` summary row records the worst ratio across
+the bandwidth grid (CI gates this >= 1: drift-triggered advertisement
+must not lose to uniform cadence at equal budget).
 """
 from __future__ import annotations
 
@@ -222,6 +231,61 @@ def run_jax_benches(full: bool):
     dt = (time.time() - t0) / iters
     out.append(("sim_subsetdp_pallas_interpret", dt / b_dp * 1e6,
                 b_dp / dt, {"rows": b_dp, "n_caches": n_dp}))
+    return out
+
+
+#: the cost-vs-advertisement-bandwidth Pareto grid (bytes per insertion)
+ADVERT_BANDWIDTHS = (1.0, 4.0, 16.0)
+
+
+def run_advert_benches(full: bool):
+    """Advert-subsystem rows (section ``sim_advert``); see the module
+    docstring.  The fixed-cadence baseline is MATCHED per bandwidth: its
+    per-cache ``update_interval`` is chosen so it advertises the same
+    number of (full-bitmap) events the self-adjusting run actually made,
+    i.e. both sides spend the same wire budget — the comparison isolates
+    WHEN to advertise, the axis arXiv:2104.01386 optimises."""
+    from repro.cachesim import SimConfig, Simulator, get_trace
+
+    out = []
+    n_req = 100_000 if full else 50_000
+    trace = get_trace("gradle", n_req, seed=0)
+    system = dict(cache_size=2_000, est_interval=50)
+    ratios = []
+    for bw in ADVERT_BANDWIDTHS:
+        cfg = SimConfig(engine="fast", policy="fna",
+                        advert_policy="self_adjusting",
+                        advert_bandwidth=bw, advert_threshold=0.05,
+                        **system)
+        sim = Simulator(cfg)
+        t0 = time.time()
+        res_sa = sim.run(trace)
+        dt = time.time() - t0
+        nodes = sim.last_system.final_state["nodes"]
+        events = [len(nd["adv_ins"]) for nd in nodes]
+        n_ins = [nd["n_ins"] for nd in nodes]
+        # same per-cache event count on a uniform cadence (insertion
+        # dynamics are advert-independent, so n_ins carries over exactly)
+        upd = tuple(max(1, n // max(e, 1))
+                    for n, e in zip(n_ins, events))
+        res_fx = Simulator(SimConfig(engine="fast", policy="fna",
+                                     update_interval=upd,
+                                     **system)).run(trace)
+        ratio = res_fx.mean_cost / res_sa.mean_cost
+        ratios.append(ratio)
+        out.append((f"advert_pareto_bw{bw:g}", dt / n_req * 1e6, ratio,
+                    {"bandwidth": bw,
+                     "advert_events": int(res_sa.advert_events),
+                     "advert_bytes": float(res_sa.advert_bytes),
+                     "mean_cost_self_adjusting": res_sa.mean_cost,
+                     "mean_cost_fixed": res_fx.mean_cost,
+                     "baseline_update_interval": list(upd),
+                     "baseline_advert_events": int(res_fx.advert_events),
+                     "n_requests": n_req}))
+    out.append(("advert_bandwidth_pareto", 0.0, min(ratios),
+                {"bandwidths": list(ADVERT_BANDWIDTHS),
+                 "ratios": [round(r, 4) for r in ratios],
+                 "n_requests": n_req}))
     return out
 
 

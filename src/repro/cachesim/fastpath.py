@@ -110,6 +110,7 @@ def run_fast(sim: Simulator, trace: np.ndarray, res: SimResult,
         system.install(sim, trace)
     sim.last_system = system
     system.add_quality(res)
+    system.add_advert(res)
 
     # --- phases 2-3: the decision plan ----------------------------------
     return plan.replay(sim, system, res)

@@ -391,6 +391,39 @@ _scenario(
 )
 
 _scenario(
+    name="advert_budget",
+    figure="beyond",
+    description="Self-adjusting advertisement under a token-bucket "
+                "bandwidth budget (arXiv:2104.01386): cost vs advert "
+                "bandwidth (bytes per insertion).  Caches advertise on "
+                "Eq. (7) predicted-FN drift when the bucket covers a "
+                "full indicator; tight budgets starve advertisement and "
+                "staleness costs surface, generous ones approach the "
+                "fresh-indicator regime.",
+    traces=("gradle",),
+    axis="advert_bandwidth",
+    values=(0.5, 2.0, 8.0, 32.0),
+    base=dict(cache_size=2_000, advert_policy="self_adjusting",
+              advert_threshold=0.05, est_interval=50),
+    golden_values=(2.0, 32.0),
+)
+
+_scenario(
+    name="advert_delta",
+    figure="beyond",
+    description="Delta advertisement (arXiv:2405.17801): the periodic "
+                "cadence with measured changed-bit delta encoding on the "
+                "wire instead of the full bitmap — identical system "
+                "evolution, different bytes-on-wire (the advert_bytes "
+                "column), shrinking as the cadence tightens.",
+    traces=("gradle",),
+    axis="update_interval",
+    values=(64, 256, 1_024),
+    base=dict(cache_size=2_000, advert_policy="delta"),
+    golden_values=(64, 256),
+)
+
+_scenario(
     name="exhaustive_small",
     figure="beyond",
     description="The exact Eq. (10) subroutine (exhaustive 2^n "
@@ -458,5 +491,6 @@ _scenario(
 GOLDEN_SCENARIOS = (
     "fig3_penalty", "fig3_penalty_shared", "fig4_gradle", "fig4_wiki",
     "fig7_num_caches", "hetero_tiers", "staggered_adverts", "delayed_view",
+    "advert_budget", "advert_delta",
     "exhaustive_small", "heavy_skew", "trace_file_smoke",
 )

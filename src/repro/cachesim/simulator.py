@@ -89,6 +89,7 @@ from repro.core import (
     perfect_information,
 )
 from repro.core.indicator import StaleIndicatorPair
+from repro.cachesim import advert as _adv
 from repro.cachesim.lru import LRUCache
 
 
@@ -109,6 +110,22 @@ class SimConfig:
     # ^ insertions between advertisements
     est_interval: Union[int, Sequence[int]] = 50
     # ^ insertions between FP/FN re-estimation
+    # --- advertisement-event subsystem (repro.cachesim.advert; arXiv:
+    # 2104.01386 / 2405.17801).  All five accept a scalar or a per-cache
+    # sequence; ``advert_policies``/... expose the normalised tuples and
+    # ``repro.cachesim.advert.resolve_advert`` the canonical spec -------
+    advert_policy: Union[str, Sequence[str]] = "periodic"
+    # ^ periodic (the paper's fixed cadence — exact legacy behaviour) |
+    #   delta (same cadence, measured delta-vs-full bytes on the wire) |
+    #   self_adjusting (drift-triggered under a token-bucket budget)
+    advert_bandwidth: Union[float, Sequence[float]] = 0.0
+    # ^ token-bucket refill, bytes per insertion (self_adjusting only)
+    advert_burst: Union[float, Sequence[float]] = 0.0
+    # ^ bucket capacity in bytes; 0 -> one full advertisement (m/8)
+    advert_threshold: Union[float, Sequence[float]] = 0.05
+    # ^ Eq. (7) predicted-FN drift that triggers an advertisement
+    advert_check: Union[int, Sequence[int]] = 0
+    # ^ insertions between drift checks; 0 -> the cache's est_interval
     q_horizon: int = 100              # Eq. (9) epoch T
     q_delta: float = 0.25             # Eq. (9) smoothing
     policy: str = "fna"               # fna | fna_cal | fno | pi | hocs
@@ -143,35 +160,83 @@ class SimConfig:
                     f"only synthesised while costs is left at the class "
                     f"default {default})")
             self.costs = tuple(1.0 + (i % 3) for i in range(self.n_caches))
-        # validate per-cache sequence lengths eagerly
-        for f in ("cache_sizes", "bpes", "update_intervals", "est_intervals"):
+        # validate per-cache sequence lengths AND values eagerly — a
+        # wrong-length sequence or a degenerate interval must fail at
+        # construction, not deep inside a sweep
+        for f in ("cache_sizes", "bpes", "update_intervals",
+                  "est_intervals", "advert_policies", "advert_bandwidths",
+                  "advert_bursts", "advert_thresholds", "advert_checks"):
             getattr(self, f)
+        if self.q_horizon < 1:
+            raise ValueError(
+                f"q_horizon must be a positive epoch length, "
+                f"got {self.q_horizon!r}")
 
-    def _per_cache(self, value, cast) -> tuple:
+    def _per_cache(self, value, cast, name: str, minimum=None) -> tuple:
         if isinstance(value, (list, tuple, np.ndarray)):
             vals = tuple(cast(v) for v in value)
             if len(vals) != self.n_caches:
                 raise ValueError(
-                    f"per-cache sequence {value!r} has length {len(vals)}, "
-                    f"expected n_caches={self.n_caches}")
-            return vals
-        return (cast(value),) * self.n_caches
+                    f"per-cache sequence {name}={value!r} has length "
+                    f"{len(vals)}, expected n_caches={self.n_caches}")
+        else:
+            vals = (cast(value),) * self.n_caches
+        if minimum is not None and any(v < minimum for v in vals):
+            raise ValueError(
+                f"{name}={value!r} must be >= {minimum} per cache")
+        return vals
 
     @property
     def cache_sizes(self) -> tuple:
-        return self._per_cache(self.cache_size, int)
+        return self._per_cache(self.cache_size, int, "cache_size", 1)
 
     @property
     def bpes(self) -> tuple:
-        return self._per_cache(self.bpe, float)
+        vals = self._per_cache(self.bpe, float, "bpe")
+        if any(v <= 0 for v in vals):
+            raise ValueError(f"bpe={self.bpe!r} must be > 0 per cache")
+        return vals
 
     @property
     def update_intervals(self) -> tuple:
-        return self._per_cache(self.update_interval, int)
+        return self._per_cache(self.update_interval, int,
+                               "update_interval", 1)
 
     @property
     def est_intervals(self) -> tuple:
-        return self._per_cache(self.est_interval, int)
+        return self._per_cache(self.est_interval, int, "est_interval", 1)
+
+    # --- advertisement-event knobs (repro.cachesim.advert) ----------------
+
+    @property
+    def advert_policies(self) -> tuple:
+        from repro.cachesim.advert import ADVERT_POLICIES
+        vals = self._per_cache(self.advert_policy, str, "advert_policy")
+        bad = [v for v in vals if v not in ADVERT_POLICIES]
+        if bad:
+            raise ValueError(
+                f"unknown advert_policy {bad[0]!r}; "
+                f"known: {ADVERT_POLICIES}")
+        return vals
+
+    @property
+    def advert_bandwidths(self) -> tuple:
+        return self._per_cache(self.advert_bandwidth, float,
+                               "advert_bandwidth", 0.0)
+
+    @property
+    def advert_bursts(self) -> tuple:
+        return self._per_cache(self.advert_burst, float, "advert_burst",
+                               0.0)
+
+    @property
+    def advert_thresholds(self) -> tuple:
+        return self._per_cache(self.advert_threshold, float,
+                               "advert_threshold", 0.0)
+
+    @property
+    def advert_checks(self) -> tuple:
+        return self._per_cache(self.advert_check, int, "advert_check", 0)
 
 
 @dataclass
@@ -218,16 +283,26 @@ class SimResult:
 
 class _CacheNode:
     def __init__(self, size: int, bpe: float, seed: int,
-                 update_interval: int, est_interval: int):
+                 update_interval: int, est_interval: int,
+                 advert: tuple = ("periodic", 0.0, 0.0, 0.0, 0)):
         self.lru = LRUCache(size)
         m = int(bpe * size)
         k = optimal_k(bpe)
         self.ind = StaleIndicatorPair(m, k, seed=seed)
         self.update_interval = update_interval
         self.est_interval = est_interval
+        # resolved advert spec (repro.cachesim.advert.resolve_advert):
+        # (policy, bandwidth bytes/insertion, burst bytes, threshold,
+        # check interval)
+        (self.adv_policy, self.adv_bandwidth, self.adv_burst,
+         self.adv_threshold, self.check_interval) = advert
+        self.adv_tokens = float(self.adv_burst)   # bucket starts full
+        self.advert_events: List = []             # [(insertion ord, bytes)]
         self.version = 0  # bumped whenever fp/fn estimates change
         self._since_adv = 0
         self._since_est = 0
+        self._since_chk = 0
+        self._n_ins = 0
         # scalar-lookup memo, bounded: an unbounded per-key memo leaks
         # hundreds of MB on recency-heavy million-request runs (~250k
         # fresh ids per cache).  hash_indices is deterministic, so
@@ -270,21 +345,45 @@ class _CacheNode:
             c.counters[eidx] = np.maximum(c.counters[eidx].astype(np.int32) - 1, 0)
         self._since_adv += 1
         self._since_est += 1
+        self._n_ins += 1
         bumped = False
         if self._since_est >= self.est_interval:
             self.ind.estimate_rates()
             self._since_est = 0
             self.version += 1
             bumped = True
-        if self._since_adv >= self.update_interval:
-            self.ind.advertise()
-            # a fresh advertisement resets the staleness estimates
-            self.ind.estimate_rates()
-            self._since_adv = 0
-            self._since_est = 0
-            self.version += 1
+        # advertisement decision (repro.cachesim.advert): periodic/delta
+        # fire on the fixed insertion cadence; self_adjusting on drift
+        # within its token-bucket budget at the check cadence
+        if self.adv_policy == "self_adjusting":
+            self._since_chk += 1
+            if self._since_chk >= self.check_interval:
+                self.adv_tokens = _adv.refill(
+                    self.adv_tokens, self.adv_burst, self.adv_bandwidth,
+                    self.check_interval)
+                self._since_chk = 0
+                cost = _adv.self_adjusting_decision(
+                    self.ind, self.adv_tokens, self.adv_threshold)
+                if cost is not None:
+                    self.adv_tokens -= cost
+                    self._advertise_event(cost)
+                    bumped = True
+        elif self._since_adv >= self.update_interval:
+            self._advertise_event(_adv.advert_cost(self.ind,
+                                                   self.adv_policy))
             bumped = True
         return bumped
+
+    def _advertise_event(self, cost: float) -> None:
+        """Advertise now: publish the bitmap, reset the staleness
+        estimates, and record the (insertion ordinal, bytes) event."""
+        self.ind.advertise()
+        # a fresh advertisement resets the staleness estimates
+        self.ind.estimate_rates()
+        self._since_adv = 0
+        self._since_est = 0
+        self.version += 1
+        self.advert_events.append((self._n_ins, float(cost)))
 
 
 class Simulator:
@@ -292,9 +391,11 @@ class Simulator:
         self.cfg = cfg
         sizes, bpes = cfg.cache_sizes, cfg.bpes
         upd, est = cfg.update_intervals, cfg.est_intervals
+        adv = _adv.resolve_advert(cfg)
         self.nodes = [
             _CacheNode(sizes[j], bpes[j], seed=cfg.seed * 1000 + j,
-                       update_interval=upd[j], est_interval=est[j])
+                       update_interval=upd[j], est_interval=est[j],
+                       advert=adv[j])
             for j in range(cfg.n_caches)
         ]
         self.q_est = [QEstimator(cfg.q_horizon, cfg.q_delta)
@@ -456,6 +557,14 @@ class Simulator:
             # reuse the request's precomputed hash row (bit-exact by
             # construction) so the scalar memo only ever sees evictions
             nodes[dj].insert(x, idx=idx_all[dj][i])
+        # advert-event totals ride as plain attributes (NOT dataclass
+        # fields — the golden harness serialises every SimResult field and
+        # pre-existing golden files must stay byte-identical)
+        res.advert_events = (getattr(res, "advert_events", 0) +
+                             sum(len(nd.advert_events) for nd in nodes))
+        res.advert_bytes = (getattr(res, "advert_bytes", 0.0) +
+                            sum(b for nd in nodes
+                                for _, b in nd.advert_events))
         return res
 
 

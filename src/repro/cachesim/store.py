@@ -61,8 +61,10 @@ from typing import Dict, Iterator, List, Optional, Tuple, Union
 import numpy as np
 
 #: bumped whenever the serialised layout (SystemTrace.to_arrays schema,
-#: table payload shape) changes — old entries then miss by construction
-SCHEMA_VERSION = 1
+#: table payload shape) changes — old entries then miss by construction.
+#: v2: advert-event subsystem (per-node advert streams + token-bucket
+#: state in the sweep snapshot; system_key grew the advert spec)
+SCHEMA_VERSION = 2
 
 #: environment variable naming the default store root (CLI + tracefiles)
 ENV_VAR = "REPRO_STORE"
@@ -147,7 +149,15 @@ class ArtifactStore:
             with np.load(path, allow_pickle=False) as z:
                 if str(z["__meta__"]) != meta:
                     return None          # foreign/colliding entry: miss
-                return {k: z[k] for k in z.files if k != "__meta__"}
+                out = {k: z[k] for k in z.files if k != "__meta__"}
+            # touch-on-hit: ``store_tool gc`` deletes oldest-mtime first
+            # (documented as LRU) — without refreshing mtime on reads it
+            # would evict the WARMEST entries under a long-lived store
+            try:
+                os.utime(path)
+            except OSError:
+                pass                     # read-only root etc.: best-effort
+            return out
         except FileNotFoundError:
             return None
         except (OSError, KeyError, ValueError, zipfile.BadZipFile):

@@ -259,8 +259,10 @@ def run_sweep(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
 
 
 #: record keys an axis label may never shadow: the per-policy result
-#: fields every record carries, plus the trace column
-_RESERVED_RECORD_KEYS = frozenset(SimResult(policy="").to_dict()) | {"trace"}
+#: fields every record carries, plus the trace column and the advert
+#: totals (attached as plain attributes by both engines)
+_RESERVED_RECORD_KEYS = (frozenset(SimResult(policy="").to_dict()) |
+                         {"trace", "advert_events", "advert_bytes"})
 
 
 def axis_column(axis: str) -> str:
@@ -284,5 +286,8 @@ def sweep_records(grid: Dict[CellKey, Dict[str, SimResult]],
         for policy, res in cell.items():
             rec = {"trace": name, col: label}
             rec.update(res.to_dict())
+            if hasattr(res, "advert_events"):
+                rec["advert_events"] = int(res.advert_events)
+                rec["advert_bytes"] = round(float(res.advert_bytes), 2)
             records.append(rec)
     return records

@@ -39,6 +39,8 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core import hash_indices
+from repro.cachesim.advert import (advert_cost, refill, resolve_advert,
+                                   self_adjusting_decision)
 
 # incremented on every full system sweep (amortisation observability)
 SWEEPS_COMPUTED = 0
@@ -97,11 +99,21 @@ def _lru_sweep(lru, trace: np.ndarray, pos: np.ndarray):
 def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
                     evict_keys, evict_iidx: np.ndarray,
                     ind_all: np.ndarray, est_events: List[Tuple], N: int) -> None:
-    """Jump from one estimate/advertise boundary to the next (no
-    per-request work): bulk-apply the window's CBF updates, fire the same
-    ``estimate_rates``/``advertise`` calls the reference ``insert`` would,
-    fill this cache's indication column per advertisement segment, and
-    record (effective request index, fp, fn) for every version bump."""
+    """Jump from one estimate/advertise/drift-check boundary to the next
+    (no per-request work): bulk-apply the window's CBF updates, fire the
+    same ``estimate_rates``/``advertise``/token-bucket calls the reference
+    ``insert`` would, fill this cache's indication column per
+    advertisement segment, record (effective request index, fp, fn) for
+    every version bump, and append the cache's advert events ``(absolute
+    insertion ordinal, bytes)`` exactly as the reference loop does.
+
+    Under ``periodic``/``delta`` advertisements fire on the fixed
+    ``update_interval`` grid; under ``self_adjusting`` the cadence grid is
+    the drift-check interval instead (``update_interval`` never fires) and
+    an advertisement happens only when the shared
+    :func:`~repro.cachesim.advert.self_adjusting_decision` gate opens —
+    called at the identical system state and token balance as the
+    reference loop, so the engines stay bit-exact twins."""
     cbf = nd.ind.cbf
     cnt = cbf.counters.astype(np.int32)
     cbf.counters = cnt              # estimate/advertise read through cbf
@@ -112,8 +124,15 @@ def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
     seg_start = 0                   # indication segment start (request idx)
     cur = 0                         # inserts flushed so far
     ev_ptr = 0
+    self_adj = nd.adv_policy == "self_adjusting"
     next_est = nd.est_interval - nd._since_est
-    next_adv = nd.update_interval - nd._since_adv
+    # the inactive cadence gets an out-of-range sentinel so it never fires
+    next_adv = (nd.update_interval - nd._since_adv) if not self_adj \
+        else n_ins + 1
+    next_chk = (nd.check_interval - nd._since_chk) if self_adj \
+        else n_ins + 1
+    last_adv = -nd._since_adv       # self_adjusting staleness origin
+    n_ins0 = nd._n_ins              # absolute ordinal of insert #0 here
 
     def flush(upto: int) -> None:
         nonlocal cur, ev_ptr
@@ -127,7 +146,7 @@ def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
         cur = upto
 
     while True:
-        nxt = min(next_est, next_adv)
+        nxt = min(next_est, next_adv, next_chk)
         if nxt > n_ins:
             break
         flush(nxt)
@@ -137,7 +156,16 @@ def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
             nd.ind.estimate_rates()
             bumps += 1
             next_est = nxt + nd.est_interval
-        if next_adv == nxt:
+        cost = None
+        if next_adv == nxt:         # periodic/delta fixed cadence
+            cost = advert_cost(nd.ind, nd.adv_policy)
+        elif next_chk == nxt:       # self_adjusting drift check
+            nd.adv_tokens = refill(nd.adv_tokens, nd.adv_burst,
+                                   nd.adv_bandwidth, nd.check_interval)
+            next_chk = nxt + nd.check_interval
+            cost = self_adjusting_decision(nd.ind, nd.adv_tokens,
+                                           nd.adv_threshold)
+        if cost is not None:
             # indications in [seg_start, g] used the OLD stale bitmap
             np.all(nd.ind.stale[idx_j[seg_start:g + 1]], axis=1,
                    out=ind_all[seg_start:g + 1, j])
@@ -147,15 +175,26 @@ def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
             bumps += 1
             seg_start = g + 1
             next_est = nxt + nd.est_interval
-            next_adv = nxt + nd.update_interval
-        nd.version += bumps
-        est_events.append((g + 1, 0, j, nd.ind.fp_est, nd.ind.fn_est))
+            if self_adj:
+                nd.adv_tokens -= cost
+                last_adv = nxt
+            else:
+                next_adv = nxt + nd.update_interval
+            nd.advert_events.append((n_ins0 + nxt, float(cost)))
+        if bumps:                   # a silent drift check bumps nothing
+            nd.version += bumps
+            est_events.append((g + 1, 0, j, nd.ind.fp_est, nd.ind.fn_est))
     flush(n_ins)
     np.all(nd.ind.stale[idx_j[seg_start:N]], axis=1,
            out=ind_all[seg_start:N, j])
     cbf.counters = np.clip(cnt, 0, 255).astype(np.uint8)
     nd._since_est = nd.est_interval - (next_est - n_ins)
-    nd._since_adv = nd.update_interval - (next_adv - n_ins)
+    if self_adj:
+        nd._since_adv = n_ins - last_adv
+        nd._since_chk = nd.check_interval - (next_chk - n_ins)
+    else:
+        nd._since_adv = nd.update_interval - (next_adv - n_ins)
+    nd._n_ins = n_ins0 + n_ins
 
 
 def _q_epoch_walk(q_est, ind_all: np.ndarray, N: int) -> List[Tuple]:
@@ -226,7 +265,9 @@ def _assemble_versions(n: int, fp0, fn0, q0, events, N: int):
 
 def _is_fresh(sim) -> bool:
     return (all(nd.version == 0 and len(nd.lru) == 0 and
-                nd._since_adv == 0 and nd._since_est == 0
+                nd._since_adv == 0 and nd._since_est == 0 and
+                nd._since_chk == 0 and nd._n_ins == 0 and
+                not nd.advert_events and nd.adv_tokens == nd.adv_burst
                 for nd in sim.nodes) and
             all(qe.version == 0 and qe._count == 0 and not qe._bootstrapped
                 for qe in sim.q_est))
@@ -269,10 +310,13 @@ class SystemTrace:
         """The SimConfig fields the system evolution depends on (policy,
         costs, miss penalty and calibration knobs are decision-side only).
         Per-cache fields enter as their normalised tuples, so a scalar and
-        its broadcast sequence hash identically."""
+        its broadcast sequence hash identically; the advert spec enters in
+        its :func:`~repro.cachesim.advert.resolve_advert` canonical form,
+        so budget knobs a policy does not read cannot split sharing."""
         return (cfg.n_caches, cfg.cache_sizes, cfg.bpes,
                 cfg.update_intervals, cfg.est_intervals,
-                cfg.q_horizon, cfg.q_delta, cfg.seed)
+                cfg.q_horizon, cfg.q_delta, cfg.seed,
+                resolve_advert(cfg))
 
     @classmethod
     def compute(cls, sim, trace: np.ndarray) -> "SystemTrace":
@@ -348,6 +392,10 @@ class SystemTrace:
                 "fp_est": nd.ind.fp_est, "fn_est": nd.ind.fn_est,
                 "version": nd.version,
                 "since_adv": nd._since_adv, "since_est": nd._since_est,
+                "since_chk": nd._since_chk, "n_ins": nd._n_ins,
+                "adv_tokens": nd.adv_tokens,
+                "adv_ins": [int(e[0]) for e in nd.advert_events],
+                "adv_bytes": [float(e[1]) for e in nd.advert_events],
             } for nd in sim.nodes],
             "q": [{
                 "q": qe.q, "version": qe.version, "count": qe._count,
@@ -378,6 +426,10 @@ class SystemTrace:
         lru_cat, lru_len = _cat([nd["lru_keys"] for nd in nodes], np.uint64)
         cnt_cat, cnt_len = _cat([nd["counters"] for nd in nodes], np.uint8)
         stale_cat, stale_len = _cat([nd["stale"] for nd in nodes], bool)
+        adv_ins_cat, adv_len = _cat([nd["adv_ins"] for nd in nodes],
+                                    np.int64)
+        adv_bytes_cat, _ = _cat([nd["adv_bytes"] for nd in nodes],
+                                np.float64)
         return {
             "n": np.int64(self.n), "trace_len": np.int64(self.trace_len),
             "from_fresh": np.bool_(self.from_fresh),
@@ -401,6 +453,14 @@ class SystemTrace:
                                          np.int64),
             "node_since_est": np.asarray([nd["since_est"] for nd in nodes],
                                          np.int64),
+            "node_since_chk": np.asarray([nd["since_chk"] for nd in nodes],
+                                         np.int64),
+            "node_n_ins": np.asarray([nd["n_ins"] for nd in nodes],
+                                     np.int64),
+            "node_adv_tokens": np.asarray([nd["adv_tokens"]
+                                           for nd in nodes], np.float64),
+            "node_adv_ins": adv_ins_cat, "node_adv_len": adv_len,
+            "node_adv_bytes": adv_bytes_cat,
             "q_q": np.asarray([q["q"] for q in qs], np.float64),
             "q_version": np.asarray([q["version"] for q in qs], np.int64),
             "q_count": np.asarray([q["count"] for q in qs], np.int64),
@@ -425,6 +485,8 @@ class SystemTrace:
         lrus = _split(arrays["node_lru"], arrays["node_lru_len"])
         cnts = _split(arrays["node_counters"], arrays["node_counters_len"])
         stales = _split(arrays["node_stale"], arrays["node_stale_len"])
+        adv_ins = _split(arrays["node_adv_ins"], arrays["node_adv_len"])
+        adv_bytes = _split(arrays["node_adv_bytes"], arrays["node_adv_len"])
         n_nodes = len(lrus)
         final_state = {
             "nodes": [{
@@ -436,6 +498,12 @@ class SystemTrace:
                 "version": int(arrays["node_version"][j]),
                 "since_adv": int(arrays["node_since_adv"][j]),
                 "since_est": int(arrays["node_since_est"][j]),
+                "since_chk": int(arrays["node_since_chk"][j]),
+                "n_ins": int(arrays["node_n_ins"][j]),
+                "adv_tokens": float(arrays["node_adv_tokens"][j]),
+                "adv_ins": np.asarray(adv_ins[j], np.int64).tolist(),
+                "adv_bytes": np.asarray(adv_bytes[j],
+                                        np.float64).tolist(),
             } for j in range(n_nodes)],
             "q": [{
                 "q": float(arrays["q_q"][j]),
@@ -485,6 +553,11 @@ class SystemTrace:
             nd.version = snap["version"]
             nd._since_adv = snap["since_adv"]
             nd._since_est = snap["since_est"]
+            nd._since_chk = snap["since_chk"]
+            nd._n_ins = snap["n_ins"]
+            nd.adv_tokens = snap["adv_tokens"]
+            nd.advert_events = list(zip(snap["adv_ins"],
+                                        snap["adv_bytes"]))
         for qe, snap in zip(sim.q_est, self.final_state["q"]):
             qe.q = snap["q"]
             qe.version = snap["version"]
@@ -496,3 +569,24 @@ class SystemTrace:
         """Accumulate the (policy-independent) Fig. 1 counters."""
         for k, v in self.quality.items():
             setattr(res, k, getattr(res, k) + v)
+
+    def advert_streams(self) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Per-cache advertisement event streams: one ``(insertion
+        ordinals int64, bytes-on-wire float64)`` array pair per cache,
+        read from the end-of-run snapshot.  Ordinals are absolute 1-based
+        insertion counts into that cache."""
+        return [(np.asarray(nd["adv_ins"], np.int64),
+                 np.asarray(nd["adv_bytes"], np.float64))
+                for nd in self.final_state["nodes"]]
+
+    def add_advert(self, res) -> None:
+        """Attach the (policy-independent) advert-event totals to a
+        result, mirroring the reference loop's accumulation — plain
+        attributes, NOT SimResult dataclass fields (golden files pin the
+        dataclass field set)."""
+        nodes = self.final_state["nodes"]
+        res.advert_events = (getattr(res, "advert_events", 0) +
+                             sum(len(nd["adv_ins"]) for nd in nodes))
+        res.advert_bytes = (getattr(res, "advert_bytes", 0.0) +
+                            sum(b for nd in nodes
+                                for b in nd["adv_bytes"]))

@@ -15,6 +15,12 @@ import numpy as np
 
 class QEstimator:
     def __init__(self, horizon: int = 100, delta: float = 0.25, q0: float = 0.5):
+        if int(horizon) < 1:
+            # horizon <= 0 would make observe() close an epoch on a zero
+            # count (ZeroDivisionError) and observe_batch() loop forever
+            raise ValueError(
+                f"QEstimator horizon must be a positive epoch length, "
+                f"got {horizon!r}")
         self.horizon = int(horizon)
         self.delta = float(delta)
         self.q = float(q0)

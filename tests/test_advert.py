@@ -1,0 +1,498 @@
+"""Advertisement-event subsystem suite (``repro.cachesim.advert``).
+
+Pins the tentpole contract of the budgeted/self-adjusting advertisement
+work (arXiv:2104.01386 / 2405.17801):
+
+  * **strict special case** — every pre-existing golden scenario,
+    re-expressed with an EXPLICIT ``periodic`` advert policy (and noisy
+    budget knobs the policy must ignore), reproduces its committed
+    golden file bit-identically on the fast engine, and spot-checked on
+    the reference engine;
+  * **bit-exact twins** — the ``delta`` and ``self_adjusting`` policies
+    produce identical results, advert event streams, and end-of-run
+    system state on both engines;
+  * **budget semantics** — the token bucket genuinely bounds the wire
+    spend, and drift below threshold keeps caches silent;
+  * **cadence reconstruction** — end-of-sweep staleness counters are
+    exact at advertisement boundaries (boundary-aligned traces across
+    staggered cadences);
+  * **key anatomy** — ``system_key`` grows the canonical advert spec
+    (budget knobs a policy does not read cannot split sweep sharing),
+    and the store round-trips the event streams bit-exactly.
+
+Plus the satellite bugfixes: store gc touch-on-hit ordering, per-cache
+config length/value validation, ``QEstimator`` horizon validation, and
+``store_tool._parse_bytes`` robustness.
+"""
+import dataclasses
+import importlib.util
+import json
+import math
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.cachesim import (
+    ArtifactStore,
+    SimConfig,
+    SimResult,
+    Simulator,
+    get_scenario,
+    get_trace,
+)
+from repro.cachesim.advert import (
+    ADVERT_POLICIES,
+    delta_advert_bytes,
+    full_advert_bytes,
+    predicted_fn,
+    resolve_advert,
+)
+from repro.cachesim.scenarios import GOLDEN_SCENARIOS
+from repro.cachesim.simulator import run_policies
+from repro.cachesim.sweep import (
+    cell_label,
+    cell_overrides,
+    hashable_label,
+    run_grid,
+    sweep_records,
+)
+from repro.cachesim.systemstate import SystemTrace
+from repro.core import QEstimator
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+RESULT_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
+
+#: golden scenarios that predate the advert axis (implicit periodic) —
+#: the "strict special case" claim is about exactly these
+PRE_ADVERT_SCENARIOS = tuple(
+    n for n in GOLDEN_SCENARIOS
+    if get_scenario(n).base.get("advert_policy", "periodic") == "periodic")
+
+#: budget knobs an explicit periodic policy must IGNORE (resolve_advert
+#: zeroes them, so they change neither evolution nor system_key)
+NOISY_KNOBS = dict(advert_bandwidth=7.0, advert_burst=123.0,
+                   advert_threshold=0.5, advert_check=17)
+
+
+def _node_state(nd):
+    return (tuple(nd.advert_events), nd._since_adv, nd._since_est,
+            nd._since_chk, nd._n_ins, nd.adv_tokens,
+            nd.ind.cbf.counters.tobytes(), nd.ind.stale.tobytes(),
+            nd.ind.fp_est, nd.ind.fn_est, nd.version)
+
+
+def _run(policy, engine, trace, **kw):
+    cfg = SimConfig(policy=policy, engine=engine, **kw)
+    sim = Simulator(cfg)
+    return sim, sim.run(trace)
+
+
+# ---------------------------------------------------------------------------
+# Strict special case: periodic advert events == committed golden files
+# ---------------------------------------------------------------------------
+
+def test_pre_advert_scenarios_cover_the_legacy_registry():
+    assert set(PRE_ADVERT_SCENARIOS) == \
+        set(GOLDEN_SCENARIOS) - {"advert_budget", "advert_delta"}
+
+
+@pytest.mark.parametrize("name", PRE_ADVERT_SCENARIOS)
+def test_periodic_event_stream_reproduces_golden(name):
+    """Every pre-existing golden (trace, cell, policy), re-run with the
+    advert policy spelled out as ``periodic`` plus budget knobs it must
+    ignore, matches the committed file bit-for-bit (fast engine)."""
+    payload = json.loads((GOLDEN_DIR / f"{name}.json").read_text())
+    sc = get_scenario(name)
+    traces, values = sc.golden_grid()
+    base = sc.config(engine="fast", advert_policy="periodic",
+                     **NOISY_KNOBS, **sc.golden_base)
+    grid = run_grid(traces, base, sc.axis, values, policies=sc.policies)
+    for cell in payload["cells"]:
+        res = grid[(cell["trace"], hashable_label(cell["label"]))][
+            cell["policy"]]
+        for f in RESULT_FIELDS:
+            assert getattr(res, f) == cell["result"][f], \
+                (name, cell["trace"], cell["label"], cell["policy"], f)
+        # the event-stream accounting rode along (zero is legitimate
+        # when a cell's insertions never reach its cadence)
+        assert res.advert_events >= 0 and res.advert_bytes >= 0.0
+
+
+def test_periodic_event_stream_reference_spot_check():
+    """One golden cell on the REFERENCE engine with the explicit periodic
+    advert spec — the special case holds in the oracle loop too."""
+    name = "fig4_gradle"
+    payload = json.loads((GOLDEN_DIR / f"{name}.json").read_text())
+    sc = get_scenario(name)
+    traces, golden_values = sc.golden_grid()
+    first = payload["cells"][0]
+    values = [v for v in golden_values
+              if hashable_label(cell_label(sc.axis, v)) ==
+              hashable_label(first["label"])]
+    cfg = sc.config(engine="reference", advert_policy="periodic",
+                    **NOISY_KNOBS, **sc.golden_base)
+    cfg = dataclasses.replace(cfg, **cell_overrides(sc.axis, values[0]))
+    out = run_policies(traces[first["trace"]], cfg, policies=sc.policies)
+    for cell in payload["cells"]:
+        if cell["trace"] != first["trace"] or cell["label"] != first["label"]:
+            continue
+        for f in RESULT_FIELDS:
+            assert getattr(out[cell["policy"]], f) == cell["result"][f], \
+                (cell["policy"], f)
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact engine twins on the new policies
+# ---------------------------------------------------------------------------
+
+ADVERT_CONFIGS = (
+    dict(advert_policy="delta", update_interval=80),
+    dict(advert_policy="self_adjusting", advert_bandwidth=2.0,
+         advert_threshold=0.05, est_interval=50),
+    dict(advert_policy="self_adjusting", advert_bandwidth=25.0,
+         advert_threshold=0.02, advert_check=30, advert_burst=2_000.0),
+    # heterogeneous: one cache periodic, one delta, one self-adjusting
+    dict(advert_policy=("periodic", "delta", "self_adjusting"),
+         advert_bandwidth=8.0, update_interval=120),
+)
+
+
+@pytest.mark.parametrize("advert", ADVERT_CONFIGS)
+@pytest.mark.parametrize("policy", ("fna", "fno", "fna_cal"))
+def test_fast_reference_parity(advert, policy):
+    """Results, advert event streams, and the full end-of-run node state
+    agree between engines for every new-policy configuration."""
+    trace = get_trace("wiki", 8_000, seed=3)
+    kw = dict(cache_size=400, **advert)
+    sf, rf = _run(policy, "fast", trace, **kw)
+    sr, rr = _run(policy, "reference", trace, **kw)
+    for f in RESULT_FIELDS:
+        assert getattr(rf, f) == getattr(rr, f), (advert, policy, f)
+    assert rf.advert_events == rr.advert_events
+    assert rf.advert_bytes == rr.advert_bytes
+    for nf, nr in zip(sf.nodes, sr.nodes):
+        assert _node_state(nf) == _node_state(nr), (advert, policy)
+    # the SystemTrace exposes the same streams the nodes recorded
+    for (ins, byt), nd in zip(sf.last_system.advert_streams(), sr.nodes):
+        assert ins.tolist() == [e[0] for e in nd.advert_events]
+        assert byt.tolist() == [e[1] for e in nd.advert_events]
+
+
+def test_delta_costs_below_full_at_tight_cadence():
+    """A tight cadence changes few bits between adverts, so the measured
+    delta encoding genuinely undercuts the full bitmap (and never
+    exceeds it)."""
+    trace = get_trace("gradle", 8_000, seed=1)
+    sim, res = _run("fna", "fast", trace, cache_size=2_000,
+                    advert_policy="delta", update_interval=64)
+    full = sim.nodes[0].ind.cbf.m / 8.0
+    costs = [e[1] for nd in sim.nodes for e in nd.advert_events]
+    assert costs and all(c <= full for c in costs)
+    assert min(costs) < full            # at least one genuine delta win
+
+
+def test_self_adjusting_budget_is_respected():
+    """Token-bucket semantics: every advert costs the full bitmap, fires
+    on a check boundary, and total spend never exceeds the initial burst
+    plus the total refill the run could have earned."""
+    trace = get_trace("wiki", 10_000, seed=0)
+    bw, chk = 3.0, 50
+    sim, res = _run("fna", "reference", trace, cache_size=500,
+                    advert_policy="self_adjusting", advert_bandwidth=bw,
+                    advert_threshold=0.05, advert_check=chk)
+    assert res.advert_events > 0
+    for nd in sim.nodes:
+        full = nd.ind.cbf.m / 8.0
+        assert nd.adv_burst == full          # default burst = one advert
+        spent = 0.0
+        for ins, cost in nd.advert_events:
+            assert cost == full
+            assert ins % chk == 0            # only at check boundaries
+            spent += cost
+        assert spent <= nd.adv_burst + bw * nd._n_ins + 1e-9
+        assert nd.adv_tokens >= 0.0
+
+
+def test_self_adjusting_silent_below_threshold_and_on_empty_budget():
+    trace = get_trace("wiki", 6_000, seed=0)
+    # threshold above 1: Eq. (7) prediction can never cross it
+    sim, res = _run("fna", "fast", trace, cache_size=500,
+                    advert_policy="self_adjusting", advert_bandwidth=50.0,
+                    advert_threshold=1.5)
+    assert res.advert_events == 0
+    # zero bandwidth: the prepaid burst covers exactly one advert ever
+    sim, res = _run("fna", "fast", trace, cache_size=500,
+                    advert_policy="self_adjusting", advert_bandwidth=0.0,
+                    advert_threshold=0.05)
+    assert all(len(nd.advert_events) <= 1 for nd in sim.nodes)
+    assert res.advert_events == sum(len(nd.advert_events)
+                                    for nd in sim.nodes)
+
+
+def test_update_interval_does_not_fire_under_self_adjusting():
+    """The fixed cadence is inert in self-adjusting mode: an absurdly
+    short update_interval produces no periodic adverts."""
+    trace = get_trace("wiki", 4_000, seed=0)
+    sim, res = _run("fna", "reference", trace, cache_size=500,
+                    update_interval=1,
+                    advert_policy="self_adjusting", advert_bandwidth=0.0,
+                    advert_threshold=1.5)
+    assert res.advert_events == 0
+
+
+# ---------------------------------------------------------------------------
+# Boundary-aligned cadence reconstruction (the systemstate.py:158 audit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("intervals", [(10, 20, 40), (24, 40, 60)])
+def test_boundary_aligned_reconstruction(intervals):
+    """Unique-key trace, per-cache insertion counts an exact multiple of
+    each (staggered) cadence: the walk's end-of-sweep ``_since_adv``/
+    ``_since_est`` reconstruction must land exactly ON the boundary
+    (zero), the final advert event exactly AT the last insertion, and
+    the whole node state must match the reference loop."""
+    n_per = 120                              # multiple of every cadence
+    trace = np.arange(3 * n_per, dtype=np.uint64)   # dj = key % 3
+    kw = dict(cache_size=200, update_interval=intervals, est_interval=12)
+    sf, rf = _run("fna", "fast", trace, **kw)
+    sr, rr = _run("fna", "reference", trace, **kw)
+    for j, (nf, nr) in enumerate(zip(sf.nodes, sr.nodes)):
+        assert nf._n_ins == nr._n_ins == n_per
+        assert nf._since_adv == nr._since_adv == 0, j
+        assert nf._since_est == nr._since_est == 0, j
+        assert nf.advert_events[-1][0] == n_per, j
+        assert len(nf.advert_events) == n_per // intervals[j]
+        assert _node_state(nf) == _node_state(nr), j
+    for f in RESULT_FIELDS:
+        assert getattr(rf, f) == getattr(rr, f), f
+
+
+def test_boundary_aligned_reconstruction_self_adjusting():
+    """Same boundary discipline for the drift-check cadence: with the
+    check interval dividing the insertion count, ``_since_chk`` lands on
+    zero in both engines."""
+    n_per = 120
+    trace = np.arange(3 * n_per, dtype=np.uint64)
+    kw = dict(cache_size=200, advert_policy="self_adjusting",
+              advert_bandwidth=5.0, advert_threshold=0.05,
+              advert_check=30, est_interval=12)
+    sf, _ = _run("fna", "fast", trace, **kw)
+    sr, _ = _run("fna", "reference", trace, **kw)
+    for nf, nr in zip(sf.nodes, sr.nodes):
+        assert nf._since_chk == nr._since_chk == 0
+        assert _node_state(nf) == _node_state(nr)
+
+
+# ---------------------------------------------------------------------------
+# Key anatomy + store round-trip
+# ---------------------------------------------------------------------------
+
+def test_system_key_grows_canonical_advert_spec():
+    base = SimConfig()
+    k0 = SystemTrace.system_key(base)
+    # periodic ignores budget knobs: same key, sharing not split
+    noisy = SimConfig(**NOISY_KNOBS)
+    assert SystemTrace.system_key(noisy) == k0
+    # scalar and broadcast sequence resolve identically
+    seq = SimConfig(advert_policy=("periodic",) * 3)
+    assert SystemTrace.system_key(seq) == k0
+    # policy and live budget knobs DO shift the key
+    for kw in (dict(advert_policy="delta"),
+               dict(advert_policy="self_adjusting"),
+               dict(advert_policy="self_adjusting", advert_bandwidth=2.0),
+               dict(advert_policy="self_adjusting", advert_check=25)):
+        assert SystemTrace.system_key(SimConfig(**kw)) != k0, kw
+
+
+def test_resolve_advert_defaults():
+    cfg = SimConfig(cache_size=500, advert_policy="self_adjusting",
+                    advert_bandwidth=1.0, est_interval=40)
+    spec = resolve_advert(cfg)
+    m = int(cfg.bpes[0] * cfg.cache_sizes[0])
+    for pol, bw, burst, th, chk in spec:
+        assert pol == "self_adjusting" and bw == 1.0
+        assert burst == m / 8.0              # 0 -> one full advertisement
+        assert chk == 40                     # 0 -> est_interval
+    assert resolve_advert(SimConfig(**NOISY_KNOBS)) == \
+        (("periodic", 0.0, 0.0, 0.0, 0),) * 3
+
+
+def test_store_roundtrip_carries_advert_streams(tmp_path):
+    """save_sweep -> load_sweep preserves the advert event streams and
+    token state bit-exactly, and a hydrated install() leaves a fresh
+    simulator in the donor's exact advert state."""
+    trace = get_trace("wiki", 6_000, seed=2)
+    cfg = SimConfig(engine="fast", cache_size=400,
+                    advert_policy="self_adjusting", advert_bandwidth=4.0,
+                    advert_threshold=0.05)
+    donor = Simulator(cfg)
+    donor.run(trace)
+    st = donor.last_system
+    store = ArtifactStore(tmp_path)
+    store.save_sweep(st)
+    hyd = store.load_sweep(trace, SystemTrace.system_key(cfg))
+    assert hyd is not None
+    for (a_ins, a_b), (b_ins, b_b) in zip(st.advert_streams(),
+                                          hyd.advert_streams()):
+        assert a_ins.tolist() == b_ins.tolist()
+        assert a_b.tolist() == b_b.tolist()
+    fresh = Simulator(cfg)
+    hyd.install(fresh, trace)
+    for nf, nd in zip(fresh.nodes, donor.nodes):
+        assert _node_state(nf) == _node_state(nd)
+    res = SimResult(policy="fna")
+    hyd.add_advert(res)
+    assert res.advert_events == sum(len(nd.advert_events)
+                                    for nd in donor.nodes)
+
+
+def test_run_grid_advert_bandwidth_axis():
+    """advert_bandwidth is a sweepable system axis end to end, and the
+    flattened records carry the advert totals."""
+    traces = {"gradle": get_trace("gradle", 5_000, seed=1)}
+    base = SimConfig(engine="fast", cache_size=2_000, est_interval=50,
+                     advert_policy="self_adjusting", advert_threshold=0.05)
+    grid = run_grid(traces, base, "advert_bandwidth", (2.0, 32.0),
+                    policies=("fna", "pi"))
+    recs = sweep_records(grid, axis="advert_bandwidth")
+    assert {r["advert_bandwidth"] for r in recs} == {2.0, 32.0}
+    by_bw = {r["advert_bandwidth"]: r for r in recs if r["policy"] == "fna"}
+    assert by_bw[2.0]["advert_bytes"] < by_bw[32.0]["advert_bytes"]
+    assert all(r["advert_events"] > 0 for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (7) drift signal + wire-cost helpers
+# ---------------------------------------------------------------------------
+
+def test_predicted_fn_matches_estimate_rates_without_mutation():
+    trace = get_trace("wiki", 3_000, seed=0)
+    sim, _ = _run("fna", "reference", trace, cache_size=300)
+    for nd in sim.nodes:
+        fp0, fn0 = nd.ind.fp_est, nd.ind.fn_est
+        drift = predicted_fn(nd.ind)
+        assert (nd.ind.fp_est, nd.ind.fn_est) == (fp0, fn0)  # no mutation
+        nd.ind.estimate_rates()
+        assert drift == nd.ind.fn_est        # identical arithmetic
+        assert full_advert_bytes(nd.ind) == nd.ind.cbf.m / 8.0
+        assert 0.0 <= delta_advert_bytes(nd.ind) <= full_advert_bytes(nd.ind)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: store gc touch-on-hit (LRU ordering regression)
+# ---------------------------------------------------------------------------
+
+def test_gc_touch_on_hit_keeps_warm_entries(tmp_path):
+    """Reads refresh mtime, so ``gc`` (oldest-mtime deletion) evicts the
+    COLD entry, not the one just hit — the documented LRU behaviour."""
+    store = ArtifactStore(tmp_path)
+    store.save_table("a" * 64, (1,), ("warm",), np.arange(64))
+    store.save_table("b" * 64, (1,), ("cold",), np.arange(64))
+    warm_path = store._path("table", store.table_meta("a" * 64, (1,),
+                                                      ("warm",)))
+    cold_path = store._path("table", store.table_meta("b" * 64, (1,),
+                                                      ("cold",)))
+    # age the warm entry far below the cold one, then HIT it
+    old = time.time() - 10_000
+    os.utime(warm_path, (old, old))
+    assert store.load_table("a" * 64, (1,), ("warm",)) is not None
+    assert warm_path.stat().st_mtime > cold_path.stat().st_mtime - 1.0
+    # gc to below two entries: the cold one (oldest mtime now) must go
+    keep = warm_path.stat().st_size + 1
+    deleted = store.gc(keep)
+    assert cold_path in deleted and warm_path.exists()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-cache config validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("field,bad", [
+    ("cache_size", (100, 100)), ("bpe", (8.0, 8.0)),
+    ("update_interval", (10, 10)), ("est_interval", (5, 5)),
+    ("advert_policy", ("periodic", "periodic")),
+    ("advert_bandwidth", (1.0, 1.0)), ("advert_burst", (1.0, 1.0)),
+    ("advert_threshold", (0.1, 0.1)), ("advert_check", (5, 5)),
+])
+def test_per_cache_wrong_length_raises_at_construction(field, bad):
+    with pytest.raises(ValueError, match=field):
+        SimConfig(n_caches=3, **{field: bad})
+
+
+@pytest.mark.parametrize("field,bad", [
+    ("cache_size", 0), ("bpe", 0.0), ("bpe", -2.0),
+    ("update_interval", 0), ("est_interval", 0),
+    ("advert_bandwidth", -1.0), ("advert_burst", -5.0),
+    ("advert_threshold", -0.1), ("advert_check", -3),
+])
+def test_degenerate_per_cache_values_raise(field, bad):
+    with pytest.raises(ValueError):
+        SimConfig(**{field: bad})
+
+
+def test_unknown_advert_policy_raises():
+    with pytest.raises(ValueError, match="unknown advert_policy"):
+        SimConfig(advert_policy="shout")
+    with pytest.raises(ValueError, match="unknown advert_policy"):
+        SimConfig(advert_policy=("periodic", "nope", "delta"))
+    assert ADVERT_POLICIES == ("periodic", "delta", "self_adjusting")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: QEstimator horizon + store_tool._parse_bytes validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("horizon", (0, -1, -100))
+def test_qestimator_rejects_nonpositive_horizon(horizon):
+    with pytest.raises(ValueError, match="horizon"):
+        QEstimator(horizon=horizon)
+
+
+def test_simconfig_rejects_nonpositive_q_horizon():
+    with pytest.raises(ValueError, match="q_horizon"):
+        SimConfig(q_horizon=0)
+    with pytest.raises(ValueError, match="q_horizon"):
+        SimConfig(q_horizon=-5)
+
+
+def _store_tool():
+    path = Path(__file__).resolve().parents[1] / "tools" / "store_tool.py"
+    spec = importlib.util.spec_from_file_location("store_tool_mod", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.parametrize("raw,expected", [
+    ("4096", 4096), ("1K", 1 << 10), ("1k", 1 << 10),
+    ("1KB", 1 << 10), ("1kb", 1 << 10),
+    ("1.5K", int(1.5 * (1 << 10))), ("2M", 2 << 20), ("2MB", 2 << 20),
+    ("3G", 3 << 30), ("1.5 GB", int(1.5 * (1 << 30))),
+    (" 500 M ", 500 << 20), ("0", 0),
+])
+def test_parse_bytes_accepts(raw, expected):
+    assert _store_tool()._parse_bytes(raw) == expected
+
+
+@pytest.mark.parametrize("raw", ["", "abc", "12Q", "K", "--3", "-1K",
+                                 "-4096", "1..5K", "1e3e4"])
+def test_parse_bytes_rejects_with_clear_error(raw):
+    import argparse
+    with pytest.raises(argparse.ArgumentTypeError, match="invalid size"):
+        _store_tool()._parse_bytes(raw)
+
+
+def test_store_tool_gc_rejects_bad_size_as_usage_error(tmp_path):
+    repo = Path(__file__).resolve().parents[1]
+    env = {**os.environ, "PYTHONPATH": str(repo / "src")}
+    r = subprocess.run(
+        [sys.executable, str(repo / "tools" / "store_tool.py"),
+         "--store", str(tmp_path), "gc", "--max-bytes", "12Q"],
+        capture_output=True, text=True, env=env, cwd=repo)
+    assert r.returncode == 2                 # argparse usage error
+    assert "invalid size" in r.stderr

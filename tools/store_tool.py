@@ -31,13 +31,31 @@ import sys
 
 
 def _parse_bytes(s: str) -> int:
+    """Parse a size like ``500M`` / ``1.5 GB`` / ``4096`` into bytes.
+
+    Accepts an optional K/M/G multiplier with an optional trailing ``B``
+    (any case); rejects negatives and anything unparseable with a clear
+    ``argparse``-friendly error instead of a bare ``float()`` traceback.
+    """
+    raw = s
     s = s.strip().upper()
+    if s.endswith("B"):
+        s = s[:-1]
     mult = 1
     for suffix, m in (("K", 1 << 10), ("M", 1 << 20), ("G", 1 << 30)):
         if s.endswith(suffix):
             s, mult = s[:-1], m
             break
-    return int(float(s) * mult)
+    try:
+        val = float(s.strip())
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"invalid size {raw!r}: expected <number>[K|M|G][B], "
+            f"e.g. 500M, 1.5GB, 4096")
+    if val < 0:
+        raise argparse.ArgumentTypeError(
+            f"invalid size {raw!r}: must be non-negative")
+    return int(val * mult)
 
 
 def _fmt_size(n: int) -> str:
@@ -99,7 +117,8 @@ def main(argv=None) -> int:
     sub.add_parser("ls", help="list entries oldest-first + summary")
     gc = sub.add_parser("gc", help="delete oldest entries over the limit")
     gc.add_argument("--max-bytes", required=True, metavar="N",
-                    help="target size (suffixes K/M/G accepted)")
+                    type=_parse_bytes,
+                    help="target size (suffixes K/M/G[B] accepted)")
     sub.add_parser("verify", help="check every archive loads")
     args = ap.parse_args(argv)
 
@@ -110,7 +129,7 @@ def main(argv=None) -> int:
     if args.cmd == "ls":
         return cmd_ls(store)
     if args.cmd == "gc":
-        return cmd_gc(store, _parse_bytes(args.max_bytes))
+        return cmd_gc(store, args.max_bytes)
     return cmd_verify(store)
 
 
