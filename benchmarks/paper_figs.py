@@ -320,16 +320,18 @@ def run_scenario_pipeline(name: str, *, smoke: bool = False,
                           trace_file: Optional[str] = None,
                           trace_format: Optional[str] = None,
                           key_column: Optional[str] = None,
-                          store=None, workers: int = 0) -> dict:
+                          store=None, workers: int = 0,
+                          chunk_size: Optional[int] = None) -> dict:
     """Run one scenario end-to-end and write the requested artifacts.
     Returns ``{"scenario", "records", "seconds", "paths"}``.
 
     ``trace_file`` replays the scenario's grid on an external request log
     (wiki/CDN shape; see ``repro.cachesim.tracefiles``) instead of the
     declared workloads; ``trace_format``/``key_column`` are its loader
-    knobs.  ``store``/``workers`` are the artifact-store root and
-    phase-1 process-pool size passed to the grid runner (see
-    ``repro.cachesim.store``)."""
+    knobs.  ``store``/``workers``/``chunk_size`` are the artifact-store
+    root, phase-1 process-pool size and streaming phase-1 slice length
+    passed to the grid runner (see ``repro.cachesim.store`` and
+    ``docs/engine.md`` §Streaming phase 1)."""
     sc = get_scenario(name)
     if trace_file is not None:
         sc = _rebind_traces(sc, trace_file, trace_format, key_column)
@@ -344,7 +346,8 @@ def run_scenario_pipeline(name: str, *, smoke: bool = False,
     # at a few thousand requests, where the display grid's long cadences
     # would produce all-miss cells
     records = run_scenario(sc, n_requests=n_req, engine=engine, golden=smoke,
-                           store=store, workers=workers)
+                           store=store, workers=workers,
+                           chunk_size=chunk_size)
     dt = time.time() - t0
     # loader catalog/working-set stats (Sec. V-B) of any file-backed
     # workloads, at the subsample length that actually ran — the run
@@ -449,7 +452,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--workers", type=int, default=0, metavar="N",
                     help="compute independent system-key groups' sweeps "
                          "in an N-process pool (bit-identical to serial)")
+    ap.add_argument("--chunk-size", type=int, default=None, metavar="N",
+                    help="stream every phase-1 system sweep through "
+                         "N-request trace slices (bit-identical to the "
+                         "one-shot sweep, bounded working set; see "
+                         "docs/engine.md)")
     args = ap.parse_args(argv)
+    if args.chunk_size is not None and args.chunk_size < 1:
+        ap.error("--chunk-size must be >= 1")
     if args.store:
         # trace parse caches join the same root (tracefiles reads the env)
         os.environ["REPRO_STORE"] = args.store
@@ -490,7 +500,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             write_csv=args.csv, write_plot=args.plot, engine=args.engine,
             trace_file=args.trace_file, trace_format=args.trace_format,
             key_column=args.key_column, store=args.store,
-            workers=args.workers)
+            workers=args.workers, chunk_size=args.chunk_size)
         print(_summary_line(out, get_scenario(name).axis))
     return 0
 

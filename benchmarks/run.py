@@ -15,6 +15,13 @@ fields a section attaches — table row counts, device counts) — the CI
 bench-smoke job
 uploads it as the ``BENCH_sim.json`` artifact so the perf trajectory
 accumulates per commit, and gates on the headline speedups.
+
+Every JSON record also carries ``ru_maxrss`` — the harness process's
+peak RSS in KB (``getrusage(RUSAGE_SELF)``, Linux semantics) sampled
+right after the row ran.  It is a process HIGH-WATER mark, monotone
+across rows within one run; rows that need per-path isolation (the
+``sim_ingest`` section) measure in child processes and report their own
+numbers in the extras.
 """
 from __future__ import annotations
 
@@ -22,6 +29,18 @@ import argparse
 import json
 import sys
 import time
+
+try:
+    import resource
+except ImportError:                      # non-POSIX host
+    resource = None
+
+
+def _ru_maxrss() -> int:
+    """Peak RSS of this process in KB (0 where getrusage is missing)."""
+    if resource is None:
+        return 0
+    return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
 
 
 def paper_fig_benches(full: bool):
@@ -133,6 +152,14 @@ def sim_advert_benches(full: bool):
     return run_advert_benches(full)
 
 
+def sim_ingest_benches(full: bool):
+    """Streaming trace ingestion: 10M-request log generation, one-shot vs
+    streaming statistics in isolated child processes, and the
+    ``ingest_peak_rss_ratio`` row (CI-gated <= 0.5)."""
+    from benchmarks.sim import run_ingest_benches
+    return run_ingest_benches(full)
+
+
 def serving_bench(full: bool):
     out = []
     try:
@@ -141,6 +168,13 @@ def serving_bench(full: bool):
     except ImportError:
         pass
     return out
+
+
+def router_replay_bench(full: bool):
+    """Concurrent-client router replay: throughput + p50/p99 decision
+    latency per scenario-defined regime, plus a batch-size sweep."""
+    from benchmarks.serving import run_replay_benches
+    return run_replay_benches(full)
 
 
 def main() -> None:
@@ -164,7 +198,9 @@ def main() -> None:
         "sim_jax": sim_jax_benches,
         "sim_store": sim_store_benches,
         "sim_advert": sim_advert_benches,
+        "sim_ingest": sim_ingest_benches,
         "serving": serving_bench,
+        "router_replay": router_replay_bench,
     }
     records = []
     print("name,us_per_call,derived")
@@ -178,7 +214,7 @@ def main() -> None:
             print(f"{name},{us:.3f},{derived:.6g}")
             sys.stdout.flush()
             rec = {"name": name, "us_per_call": us,
-                   "derived": float(derived)}
+                   "derived": float(derived), "ru_maxrss": _ru_maxrss()}
             if rest:
                 rec.update(rest[0])
             records.append(rec)

@@ -1,9 +1,22 @@
 """Serving benchmark: the FNA prefix-cache router end to end (paper
-technique on the serving path), host wall-clock."""
+technique on the serving path), host wall-clock.
+
+``run_replay_benches`` (section ``router_replay``) drives the
+concurrent-client replay harness (``repro.serving.replay``): threaded
+clients against each scenario-defined cluster regime, reporting
+sustained throughput (derived = reqs/s) plus p50/p99 decision latency
+in the extras, and a batch-size sweep on the heterogeneous regime.  The
+CI bench-smoke job merges these rows into BENCH_sim.json, so the
+routing tier's latency trajectory accumulates per commit next to the
+simulator's."""
 from __future__ import annotations
 
 import dataclasses
 import time
+
+#: replay regimes the bench covers (>= 2 per the PR-9 acceptance bar)
+REPLAY_REGIMES = ("hetero_tiers", "staggered_adverts", "delayed_view")
+REPLAY_BATCHES = (1, 4, 16)
 
 
 def run_serving_bench(full: bool):
@@ -28,4 +41,37 @@ def run_serving_bench(full: bool):
     # headline sanity row: cost reduction of fna_cal vs fno
     out.append(("serving_fna_cal_vs_fno_cost_ratio", 0.0,
                 results["fna_cal"].mean_cost / results["fno"].mean_cost))
+    return out
+
+
+def _replay_extras(r) -> dict:
+    return {"regime": r.regime, "policy": r.policy,
+            "n_clients": r.n_clients, "batch_size": r.batch_size,
+            "requests": r.requests, "p50_us": round(r.p50_us, 2),
+            "p99_us": round(r.p99_us, 2),
+            "mean_cost": round(r.mean_cost, 4),
+            "hit_ratio": round(r.hit_ratio, 4)}
+
+
+def run_replay_benches(full: bool):
+    """Concurrent-client replay rows (section ``router_replay``); see the
+    module docstring.  us_per_call = wall-clock per routed request under
+    contention; derived = achieved reqs/s."""
+    from repro.serving.replay import batch_sweep, replay
+
+    n = 12_000 if full else 4_000
+    clients = 8 if full else 4
+    out = []
+    for regime in REPLAY_REGIMES:
+        r = replay(regime, policy="fna_cal", n_requests=n,
+                   n_clients=clients, batch_size=1, mode="threads", seed=0)
+        out.append((f"replay_{regime}", r.wall_s / max(r.requests, 1) * 1e6,
+                    r.achieved_rps, _replay_extras(r)))
+    # router-turn amortisation under contention: same load per batch size
+    for r in batch_sweep("hetero_tiers", policy="fna_cal",
+                         batch_sizes=REPLAY_BATCHES, n_requests=n,
+                         n_clients=clients, mode="threads", seed=0):
+        out.append((f"replay_hetero_tiers_b{r.batch_size}",
+                    r.wall_s / max(r.requests, 1) * 1e6,
+                    r.achieved_rps, _replay_extras(r)))
     return out

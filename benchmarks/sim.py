@@ -30,6 +30,19 @@ assert between the two grids (CI gates this >= 5) — and
 ``run_grid(workers=4)``, fresh store per measurement (recorded, not
 gated: spawn + import overhead makes it machine-dependent).
 
+``run_ingest_benches`` (section ``sim_ingest``) covers the streaming
+trace-ingestion tier (``repro.cachesim.tracefiles``): a 10M-request
+synthetic wiki log is generated chunk-written by ``tools/
+make_trace_file.py`` in a scratch directory, then statted twice in
+SEPARATE child processes — one-shot (``parse_trace_file`` +
+``trace_info``, the full array materialised) vs streaming
+(``stream_trace_info``, O(chunk + catalog) memory) — with an inline
+equality assert between the two :class:`TraceInfo` results.  Each child
+reports its own ``ru_maxrss`` process high-water, so the
+``ingest_peak_rss_ratio`` row (streaming / one-shot peak RSS; CI gates
+this <= 0.5) measures the paths in isolation rather than whichever
+allocator high-water the bench process accumulated first.
+
 ``run_advert_benches`` (section ``sim_advert``) covers the
 advertisement-event subsystem (``repro.cachesim.advert``): per-bandwidth
 ``advert_pareto_bw*`` rows compare the self-adjusting policy's cost
@@ -286,6 +299,105 @@ def run_advert_benches(full: bool):
                 {"bandwidths": list(ADVERT_BANDWIDTHS),
                  "ratios": [round(r, 4) for r in ratios],
                  "n_requests": n_req}))
+    return out
+
+
+#: the streaming-ingestion benchmark log (the ISSUE/CI acceptance size)
+INGEST_REQUESTS = 10_000_000
+#: catalog of the synthetic wiki log — kept moderate so the token -> id
+#: dict (paid by BOTH paths) doesn't drown the array memory the
+#: streaming path exists to avoid
+INGEST_CATALOG = 100_000
+#: streaming child's chunk size — the knob that bounds its peak memory
+INGEST_CHUNK = 1 << 16
+
+# child payloads for the two measured ingestion paths; each prints one
+# JSON object {wall_s, maxrss_kb, info} and nothing else
+_INGEST_ONESHOT = """\
+import json, resource, sys, time
+from repro.cachesim.tracefiles import parse_trace_file, trace_info
+path = sys.argv[1]
+t0 = time.perf_counter()
+ids = parse_trace_file(path, fmt="keys")
+info = trace_info(ids, path=path, fmt="keys")
+wall = time.perf_counter() - t0
+print(json.dumps({"wall_s": wall,
+                  "maxrss_kb": resource.getrusage(
+                      resource.RUSAGE_SELF).ru_maxrss,
+                  "info": info.to_dict()}))
+"""
+_INGEST_STREAM = """\
+import json, resource, sys, time
+from repro.cachesim.tracefiles import stream_trace_info
+path, chunk = sys.argv[1], int(sys.argv[2])
+t0 = time.perf_counter()
+info = stream_trace_info(path, fmt="keys", chunk_size=chunk)
+wall = time.perf_counter() - t0
+print(json.dumps({"wall_s": wall,
+                  "maxrss_kb": resource.getrusage(
+                      resource.RUSAGE_SELF).ru_maxrss,
+                  "info": info.to_dict()}))
+"""
+
+
+def run_ingest_benches(full: bool):
+    """Streaming-ingestion rows (section ``sim_ingest``); see the module
+    docstring.  Linux ``ru_maxrss`` is in KB; the extras record MB."""
+    import json
+    import os
+    import shutil
+    import subprocess
+    import sys
+    import tempfile
+    from pathlib import Path
+
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(repo / "src")] + ([env["PYTHONPATH"]]
+                               if env.get("PYTHONPATH") else []))
+
+    def _child(code: str, *argv: str) -> dict:
+        proc = subprocess.run([sys.executable, "-c", code, *argv],
+                              env=env, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise RuntimeError(f"ingest child failed:\n{proc.stderr}")
+        return json.loads(proc.stdout)
+
+    out = []
+    n = INGEST_REQUESTS
+    tmp = tempfile.mkdtemp(prefix="repro-bench-ingest-")
+    try:
+        log = Path(tmp) / "wiki_10m.log"
+        t0 = time.time()
+        subprocess.run(
+            [sys.executable, str(repo / "tools" / "make_trace_file.py"),
+             "--generator", "wiki", "--n", str(n), "--seed", "0",
+             "--kw", f"catalog={INGEST_CATALOG}",
+             "--format", "keys", "-o", str(log)],
+            env=env, check=True, capture_output=True, text=True)
+        dt_gen = time.time() - t0
+        out.append(("ingest_make_log_10m", dt_gen / n * 1e6, n / dt_gen,
+                    {"n_requests": n, "bytes": log.stat().st_size}))
+
+        one = _child(_INGEST_ONESHOT, str(log))
+        stream = _child(_INGEST_STREAM, str(log), str(INGEST_CHUNK))
+        assert stream["info"] == one["info"], \
+            f"streaming TraceInfo drifted: {stream['info']} vs {one['info']}"
+        for name, r in (("ingest_oneshot_10m", one),
+                        ("ingest_stream_10m", stream)):
+            out.append((name, r["wall_s"] / n * 1e6, n / r["wall_s"],
+                        {"n_requests": n,
+                         "maxrss_mb": round(r["maxrss_kb"] / 1024, 1),
+                         "n_unique": r["info"]["n_unique"],
+                         "top1pct_share": r["info"]["top1pct_share"]}))
+        ratio = stream["maxrss_kb"] / one["maxrss_kb"]
+        out.append(("ingest_peak_rss_ratio", 0.0, ratio,
+                    {"n_requests": n, "chunk_size": INGEST_CHUNK,
+                     "stream_maxrss_mb": round(stream["maxrss_kb"] / 1024, 1),
+                     "oneshot_maxrss_mb": round(one["maxrss_kb"] / 1024, 1)}))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
     return out
 
 

@@ -472,7 +472,8 @@ def prefetch_tables(system, cfgs: Sequence, policies: Sequence[str],
 
 def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
               share_system: bool = True, *, backend: str = "numpy",
-              mesh=None, store=None) -> List[Dict]:
+              mesh=None, store=None, chunk_size: Optional[int] = None,
+              spill=None) -> List[Dict]:
     """Run a policy panel over several decision-side cells that share one
     system evolution; returns ``[{policy: SimResult}]`` aligned with
     ``cfgs``.
@@ -500,6 +501,12 @@ def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
     (optionally device-sharded) kernel — ``mesh=None`` auto-creates the
     sweep mesh when more than one device is visible (see
     :func:`prefetch_tables`).  The replay phase is unchanged either way.
+
+    ``chunk_size`` streams every phase-1 sweep this call performs (the
+    shared one and any per-cell fallback) through fixed-size trace
+    slices; ``spill`` memmap-backs the shared sweep's per-request
+    arrays.  Both are bit-identity-preserving — see
+    ``SystemTrace.compute``.
     """
     from repro.cachesim.simulator import Simulator
     from repro.cachesim.store import as_store
@@ -526,7 +533,9 @@ def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
                 system = store.load_sweep(trace, sys_key,
                                           trace_digest=digest)
             if system is None:
-                system = SystemTrace.compute(Simulator(cfgs[0]), trace)
+                system = SystemTrace.compute(Simulator(cfgs[0]), trace,
+                                             chunk_size=chunk_size,
+                                             spill=spill)
                 if store is not None:
                     store.save_sweep(system, trace_digest=digest)
             if store is not None and backend == "numpy":
@@ -541,7 +550,8 @@ def run_cells(trace: np.ndarray, cfgs: Sequence, policies: Sequence[str],
         for p in policies:
             sim = Simulator(dataclasses.replace(cfg, policy=p))
             out[ci][p] = sim.run(trace,
-                                 system=system if share_system else None)
+                                 system=system if share_system else None,
+                                 chunk_size=chunk_size)
             if share_system and system is None:
                 system = getattr(sim, "last_system", None)
     # flush tables built this run (prefetched or replay-built) so the

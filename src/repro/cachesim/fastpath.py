@@ -93,7 +93,8 @@ def accumulate_replay(res: SimResult, st: SystemTrace, selm: np.ndarray,
 
 
 def run_fast(sim: Simulator, trace: np.ndarray, res: SimResult,
-             system: Optional[SystemTrace] = None) -> SimResult:
+             system: Optional[SystemTrace] = None,
+             chunk_size: Optional[int] = None, spill=None) -> SimResult:
     from repro.cachesim.engine import plan_for
     plan = plan_for(sim.cfg)
     if plan is None:
@@ -105,7 +106,8 @@ def run_fast(sim: Simulator, trace: np.ndarray, res: SimResult,
 
     # --- phase 1: the shared system sweep (or a reused artifact) --------
     if system is None:
-        system = SystemTrace.compute(sim, trace)
+        system = SystemTrace.compute(sim, trace, chunk_size=chunk_size,
+                                     spill=spill)
     else:
         system.install(sim, trace)
     sim.last_system = system

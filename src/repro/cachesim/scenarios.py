@@ -161,15 +161,18 @@ def run_scenario(sc: Scenario, n_requests: Optional[int] = None,
                  engine: str = "fast", share_system: bool = True,
                  policies: Optional[Sequence[str]] = None,
                  golden: bool = False, store=None,
-                 workers: int = 0) -> List[dict]:
+                 workers: int = 0,
+                 chunk_size: Optional[int] = None) -> List[dict]:
     """Execute a scenario through the shared-SystemTrace grid runner and
     return one flat record per (trace, cell, policy) — the pipeline input
     of ``benchmarks/paper_figs.py``.
 
-    ``store``/``workers`` pass straight to :func:`~repro.cachesim.sweep.
-    run_grid`: a content-addressed artifact store for sweep/table reuse
-    across runs, and a phase-1 process pool over independent system-key
-    groups (bit-identical to the serial path).
+    ``store``/``workers``/``chunk_size`` pass straight to
+    :func:`~repro.cachesim.sweep.run_grid`: a content-addressed artifact
+    store for sweep/table reuse across runs, a phase-1 process pool over
+    independent system-key groups, and streaming phase-1 sweeps over
+    fixed-size trace slices (each bit-identical to the serial one-shot
+    path).
 
     ``golden=True`` runs the pinned golden sub-grid (golden traces,
     values, base overrides and request count) instead of the display
@@ -188,7 +191,7 @@ def run_scenario(sc: Scenario, n_requests: Optional[int] = None,
     grid = run_grid(traces, base, sc.axis, values,
                     policies=tuple(policies or sc.policies),
                     share_system=share_system, store=store,
-                    workers=workers)
+                    workers=workers, chunk_size=chunk_size)
     records = sweep_records(grid, axis=sc.axis)
     # mapping cells carry coupled overrides beyond the axis label (Fig. 6
     # moves update_interval with cache_size): put them on the records so

@@ -423,12 +423,18 @@ class Simulator:
                 self._view_ver[j] = ver
 
     def run(self, trace: np.ndarray, result: Optional[SimResult] = None,
-            system=None) -> SimResult:
+            system=None, chunk_size: Optional[int] = None,
+            spill=None) -> SimResult:
         """Simulate ``trace``.  ``system`` optionally supplies a shared
         :class:`~repro.cachesim.systemstate.SystemTrace` computed by an
         earlier fast run over the same (trace, system config) — the sweep
         is then skipped and only the per-policy replay runs.  After a fast
-        run, the artifact is published as ``self.last_system``."""
+        run, the artifact is published as ``self.last_system``.
+
+        ``chunk_size``/``spill`` stream the fast engine's phase-1 sweep
+        through fixed-size trace slices (bit-identical results, bounded
+        working set — see ``SystemTrace.compute``); the per-request
+        reference loop is already O(1) in the trace and ignores both."""
         cfg = self.cfg
         res = result or SimResult(policy=cfg.policy)
         trace = np.asarray(trace, dtype=np.uint64)
@@ -442,7 +448,8 @@ class Simulator:
             # DS_PGM table or exhaustive-enumeration limits drops to the
             # reference loop transparently)
             from repro.cachesim.fastpath import run_fast
-            return run_fast(self, trace, res, system=system)
+            return run_fast(self, trace, res, system=system,
+                            chunk_size=chunk_size, spill=spill)
         return self._run_reference(trace, res)
 
     def _run_reference(self, trace: np.ndarray, res: SimResult) -> SimResult:

@@ -128,6 +128,22 @@ class ArtifactStore:
         """Where the tracefiles parse cache lives under this root."""
         return self.root / "traces"
 
+    def spill_dir(self) -> Path:
+        """A fresh scratch directory under ``<root>/spill`` for the
+        chunked sweep's per-request output memmaps (see
+        ``SystemTrace.compute(spill=...)``).  Unique per call, so
+        concurrent sweeps never collide.  Spill files are SCRATCH, not
+        content-addressed entries: the caller deletes the directory when
+        the arrays are no longer referenced (``entries``/``verify``/
+        ``gc`` ignore it)."""
+        import itertools
+        seq = getattr(ArtifactStore, "_spill_seq", None)
+        if seq is None:
+            ArtifactStore._spill_seq = seq = itertools.count()
+        d = self.root / "spill" / f"{os.getpid()}-{next(seq)}"
+        d.mkdir(parents=True, exist_ok=True)
+        return d
+
     # -- low-level entry IO ------------------------------------------------
 
     def _write(self, path: Path, arrays: Dict[str, np.ndarray],

@@ -59,7 +59,7 @@ from __future__ import annotations
 import dataclasses
 import shutil
 import tempfile
-from typing import Dict, List, Mapping, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -103,7 +103,8 @@ def cell_label(axis: str, value):
     return hashable_label(value)
 
 
-def _sweep_worker(store_root: str, trace: np.ndarray, cfg) -> str:
+def _sweep_worker(store_root: str, trace: np.ndarray, cfg,
+                  chunk_size: Optional[int] = None) -> str:
     """Process-pool job: compute ONE system-key group's sweep and persist
     it to the shared store (the cross-process hand-off).  Module-level so
     the spawn context can pickle it; returns "hit"/"computed" for
@@ -118,12 +119,13 @@ def _sweep_worker(store_root: str, trace: np.ndarray, cfg) -> str:
     key = SystemTrace.system_key(cfg)
     if store.has_sweep(digest, key):
         return "hit"
-    st = SystemTrace.compute(Simulator(cfg), trace)
+    st = SystemTrace.compute(Simulator(cfg), trace, chunk_size=chunk_size)
     store.save_sweep(st, trace_digest=digest)
     return "computed"
 
 
-def _farm_sweeps(jobs, store, workers: int) -> None:
+def _farm_sweeps(jobs, store, workers: int,
+                 chunk_size: Optional[int] = None) -> None:
     """Run the phase-1 sweep jobs ``[(trace, cfg)]`` across a spawn-based
     process pool, persisting each into ``store``.  spawn (not fork): the
     parent may hold a live XLA client, which is not fork-safe; workers
@@ -134,7 +136,7 @@ def _farm_sweeps(jobs, store, workers: int) -> None:
     root = str(store.root)
     with ProcessPoolExecutor(max_workers=min(workers, len(jobs)),
                              mp_context=ctx) as pool:
-        futs = [pool.submit(_sweep_worker, root, trace, cfg)
+        futs = [pool.submit(_sweep_worker, root, trace, cfg, chunk_size)
                 for trace, cfg in jobs]
         for f in futs:
             f.result()      # propagate worker failures loudly
@@ -151,6 +153,7 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
              mesh=None,
              store=None,
              workers: int = 0,
+             chunk_size: Optional[int] = None,
              ) -> Dict[CellKey, Dict[str, SimResult]]:
     """Run a policy grid over an arbitrary system axis; returns
     ``{(trace_name, label): {policy: SimResult}}``.
@@ -174,6 +177,10 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
     visible); see :func:`repro.cachesim.engine.run_cells`.  Replay and
     the returned results are unchanged up to the ~1e-12 near-tie
     dead-band on table masks.
+
+    ``chunk_size`` streams every phase-1 sweep (serial and farmed)
+    through fixed-size trace slices — bit-identical results, bounded
+    sweep working set (see ``SystemTrace.compute``).
     """
     from repro.cachesim.engine import plan_for, run_cells
     from repro.cachesim.store import as_store
@@ -223,7 +230,7 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
                     if sweepable and not store.has_sweep(digest, sys_key):
                         jobs.append((tr, cfgs[0]))
             if len(jobs) > 1:   # a 1-job farm is just spawn overhead
-                _farm_sweeps(jobs, store, workers)
+                _farm_sweeps(jobs, store, workers, chunk_size=chunk_size)
 
         out: Dict[CellKey, Dict[str, SimResult]] = {}
         for name, trace, order, groups in per_trace:
@@ -232,7 +239,7 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
                 group_out = run_cells(trace, [cfg for _, cfg in cells],
                                       policies, share_system=share_system,
                                       backend=backend, mesh=mesh,
-                                      store=store)
+                                      store=store, chunk_size=chunk_size)
                 for (key, _), cell_res in zip(cells, group_out):
                     results[key] = cell_res
             for key in order:       # keep the caller's cell order

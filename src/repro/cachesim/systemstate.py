@@ -33,8 +33,11 @@ it to prove a multi-policy run performed exactly one sweep.
 """
 from __future__ import annotations
 
+import itertools
+import os
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -98,7 +101,8 @@ def _lru_sweep(lru, trace: np.ndarray, pos: np.ndarray):
 
 def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
                     evict_keys, evict_iidx: np.ndarray,
-                    ind_all: np.ndarray, est_events: List[Tuple], N: int) -> None:
+                    ind_all: np.ndarray, est_events: List[Tuple], N: int,
+                    *, base: int = 0, cnt=None, finalize: bool = True):
     """Jump from one estimate/advertise/drift-check boundary to the next
     (no per-request work): bulk-apply the window's CBF updates, fire the
     same ``estimate_rates``/``advertise``/token-bucket calls the reference
@@ -113,9 +117,20 @@ def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
     an advertisement happens only when the shared
     :func:`~repro.cachesim.advert.self_adjusting_decision` gate opens —
     called at the identical system state and token balance as the
-    reference loop, so the engines stay bit-exact twins."""
+    reference loop, so the engines stay bit-exact twins.
+
+    Chunked phase 1 calls this once per (chunk, cache) with LOCAL arrays:
+    ``base`` is the chunk's global request offset (recorded-event indices
+    are globalised), ``cnt`` carries the working int32 counter array from
+    the previous chunk, and ``finalize=False`` defers the one uint8 clip
+    to the trace end — exactly where the one-shot walk performs it.  The
+    cadence/token carries (``nd._since_*``, ``nd.adv_tokens``,
+    ``nd._n_ins``) are reconstructed at every call's end either way, so a
+    chunk boundary is indistinguishable from a walk entry.  Returns the
+    working counter array for the next chunk's carry."""
     cbf = nd.ind.cbf
-    cnt = cbf.counters.astype(np.int32)
+    if cnt is None:
+        cnt = cbf.counters.astype(np.int32)
     cbf.counters = cnt              # estimate/advertise read through cbf
     ins_rows = idx_j[ins_gpos]
     ev_rows = hash_indices(np.asarray(evict_keys, dtype=np.uint64),
@@ -183,11 +198,13 @@ def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
             nd.advert_events.append((n_ins0 + nxt, float(cost)))
         if bumps:                   # a silent drift check bumps nothing
             nd.version += bumps
-            est_events.append((g + 1, 0, j, nd.ind.fp_est, nd.ind.fn_est))
+            est_events.append((base + g + 1, 0, j,
+                               nd.ind.fp_est, nd.ind.fn_est))
     flush(n_ins)
     np.all(nd.ind.stale[idx_j[seg_start:N]], axis=1,
            out=ind_all[seg_start:N, j])
-    cbf.counters = np.clip(cnt, 0, 255).astype(np.uint8)
+    if finalize:
+        cbf.counters = np.clip(cnt, 0, 255).astype(np.uint8)
     nd._since_est = nd.est_interval - (next_est - n_ins)
     if self_adj:
         nd._since_adv = n_ins - last_adv
@@ -195,12 +212,20 @@ def _cbf_event_walk(nd, j: int, idx_j: np.ndarray, ins_gpos: np.ndarray,
     else:
         nd._since_adv = nd.update_interval - (next_adv - n_ins)
     nd._n_ins = n_ins0 + n_ins
+    return cnt
 
 
-def _q_epoch_walk(q_est, ind_all: np.ndarray, N: int) -> List[Tuple]:
+def _q_epoch_walk(q_est, ind_all: np.ndarray, N: int,
+                  base: int = 0) -> List[Tuple]:
     """Advance the q-estimators through the whole trace, one batched
     ``_close_epoch`` per epoch boundary (bit-exact: positives are integer
-    counts).  Returns (effective request index, q) events per cache."""
+    counts).  Returns (effective request index, q) events per cache.
+
+    ``QEstimator.observe_batch`` is exactly split-invariant, so the
+    chunked phase 1 calls this once per chunk with the chunk's local
+    ``ind_all`` slice and its global offset as ``base`` (event indices
+    are globalised) — the fold is bit-identical to one whole-trace
+    call."""
     events: List[Tuple] = []
     horizon = q_est[0].horizon
     first = horizon - q_est[0]._count   # requests closing the first epoch
@@ -210,7 +235,7 @@ def _q_epoch_walk(q_est, ind_all: np.ndarray, N: int) -> List[Tuple]:
         prev = 0
         for b in bounds:            # each slice closes exactly one epoch
             qe.observe_batch(col[prev:b])
-            events.append((b - 1, 1, j, qe.q))
+            events.append((base + b - 1, 1, j, qe.q))
             prev = b
         qe.observe_batch(col[prev:N])   # partial tail
     return events
@@ -261,6 +286,42 @@ def _assemble_versions(n: int, fp0, fn0, q0, events, N: int):
     fp_v = np.asarray([v[2] for v in versions], np.float64)
     fn_v = np.asarray([v[3] for v in versions], np.float64)
     return pi_v, nu_v, fp_v, fn_v, points
+
+
+#: distinct spill-directory suffixes within one process (path uniqueness)
+_SPILL_SEQ = itertools.count()
+
+
+def _alloc_outputs(N: int, n: int, spill):
+    """Allocate the five per-request output arrays of one sweep:
+    ``(ind_all [N, n] bool, in_dj [N] bool, dj_all [N] int64,
+    pats [N] int64, ver_per_req [N] int64)``.
+
+    ``spill=None`` -> plain RAM.  Otherwise preallocated ``.npy``
+    memmaps under the given directory (or under a fresh
+    ``ArtifactStore.spill_dir()`` when passed a store), filled
+    chunk-by-chunk by the caller — memmaps ARE ndarrays, so every
+    downstream consumer (replay, ``to_arrays``, the store) works
+    unchanged.  The caller owns the directory's lifetime; ``N == 0``
+    falls back to RAM (zero-byte files cannot be mmapped)."""
+    if spill is None or N == 0:
+        return (np.empty((N, n), dtype=bool), np.empty(N, dtype=bool),
+                np.empty(N, dtype=np.int64), np.empty(N, dtype=np.int64),
+                np.empty(N, dtype=np.int64))
+    from numpy.lib.format import open_memmap
+    if hasattr(spill, "spill_dir"):     # an ArtifactStore
+        d = spill.spill_dir()
+    else:
+        d = Path(spill) / f"sweep-{os.getpid()}-{next(_SPILL_SEQ)}"
+    d.mkdir(parents=True, exist_ok=True)
+
+    def mm(name, dtype, shape):
+        return open_memmap(str(d / f"{name}.npy"), mode="w+",
+                           dtype=dtype, shape=shape)
+
+    return (mm("ind_all", bool, (N, n)), mm("in_dj", bool, (N,)),
+            mm("dj_all", np.int64, (N,)), mm("pats", np.int64, (N,)),
+            mm("ver_per_req", np.int64, (N,)))
 
 
 def _is_fresh(sim) -> bool:
@@ -319,59 +380,86 @@ class SystemTrace:
                 resolve_advert(cfg))
 
     @classmethod
-    def compute(cls, sim, trace: np.ndarray) -> "SystemTrace":
+    def compute(cls, sim, trace: np.ndarray, chunk_size: Optional[int] = None,
+                spill=None) -> "SystemTrace":
         """Run the full sweep on ``sim``'s nodes (advancing them in place
         to the end-of-run state) and record everything any policy replay
-        needs."""
+        needs.
+
+        ``chunk_size`` folds the trace through the sweep in slices of
+        that many requests: the LRU dict, the int32 CBF working counters,
+        the advert cadence/token carries and the q-estimators thread
+        through chunk boundaries unchanged, so the result is BIT-IDENTICAL
+        to the one-shot sweep (``chunk_size=None``, a single fold
+        iteration) while the transient working set — raw hash-index rows,
+        designated positions, eviction lists — stays O(chunk) instead of
+        O(trace).
+
+        ``spill`` (a directory path or an ``ArtifactStore``, whose
+        ``spill_dir()`` then scopes the files) additionally backs the
+        per-request OUTPUT arrays by preallocated ``.npy`` memmaps filled
+        chunk-by-chunk, bounding peak RSS at O(chunk + cache state); the
+        memmaps are ordinary ndarrays to every consumer.  The caller owns
+        the spill directory's lifetime."""
         global SWEEPS_COMPUTED
         SWEEPS_COMPUTED += 1
         n = sim.cfg.n_caches
         nodes = sim.nodes
         N = int(trace.shape[0])
         fresh = _is_fresh(sim)
+        if chunk_size is not None and int(chunk_size) < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        step = N if chunk_size is None else min(int(chunk_size), N)
 
-        dj_all = sim._designated_batch(trace)
-        pos_by_node = [np.flatnonzero(dj_all == j) for j in range(n)]
-        idx_all = [hash_indices(trace, nd.ind.cbf.k, nd.ind.cbf.m,
-                                nd.ind.cbf.seed) for nd in nodes]
         # view inputs at entry — events below record every later change
         fp0 = [nd.ind.fp_est for nd in nodes]
         fn0 = [nd.ind.fn_est for nd in nodes]
         q0 = [qe.q for qe in sim.q_est]
 
-        ind_all = np.empty((N, n), dtype=bool)
-        in_dj = np.empty(N, dtype=bool)     # designated-cache membership
+        ind_all, in_dj, dj_all, pats, ver_per_req = _alloc_outputs(
+            N, n, spill)
         events: List[Tuple] = []
-        for j, nd in enumerate(nodes):
-            pos = pos_by_node[j]
-            mem, ins_gpos, evict_keys, evict_iidx = _lru_sweep(nd.lru, trace, pos)
-            in_dj[pos] = mem
-            _cbf_event_walk(nd, j, idx_all[j], ins_gpos, evict_keys,
-                            evict_iidx, ind_all, events, N)
-        events.extend(_q_epoch_walk(sim.q_est, ind_all, N))
-
+        cnt_carry: List = [None] * n        # int32 CBF working counters
+        pow2 = 1 << np.arange(n, dtype=np.int64)
         # indicator-quality measurement on the designated cache (Fig. 1)
         quality = {"fn_events": 0, "fn_opportunities": 0, "fp_events": 0,
                    "fp_opportunities": 0, "resident": 0}
-        for j in range(n):
-            pos = pos_by_node[j]
-            md = in_dj[pos]
-            id_ = ind_all[pos, j]
-            held = int(np.count_nonzero(md))
-            quality["fn_opportunities"] += held
-            quality["resident"] += held
-            quality["fn_events"] += int(np.count_nonzero(md & ~id_))
-            quality["fp_opportunities"] += int(pos.shape[0]) - held
-            quality["fp_events"] += int(np.count_nonzero(~md & id_))
+        start = 0
+        while start < N:
+            stop = min(start + step, N)
+            nc = stop - start
+            tchunk = trace[start:stop]
+            last = stop == N
+            dj_all[start:stop] = djc = sim._designated_batch(tchunk)
+            ind_c = ind_all[start:stop]
+            in_dj_c = in_dj[start:stop]
+            for j, nd in enumerate(nodes):
+                pos = np.flatnonzero(djc == j)
+                idx_j = hash_indices(tchunk, nd.ind.cbf.k, nd.ind.cbf.m,
+                                     nd.ind.cbf.seed)
+                mem, ins_gpos, evict_keys, evict_iidx = _lru_sweep(
+                    nd.lru, tchunk, pos)
+                in_dj_c[pos] = mem
+                cnt_carry[j] = _cbf_event_walk(
+                    nd, j, idx_j, ins_gpos, evict_keys, evict_iidx,
+                    ind_c, events, nc,
+                    base=start, cnt=cnt_carry[j], finalize=last)
+                id_ = ind_c[pos, j]
+                held = int(np.count_nonzero(mem))
+                quality["fn_opportunities"] += held
+                quality["resident"] += held
+                quality["fn_events"] += int(np.count_nonzero(mem & ~id_))
+                quality["fp_opportunities"] += int(pos.shape[0]) - held
+                quality["fp_events"] += int(np.count_nonzero(~mem & id_))
+            events.extend(_q_epoch_walk(sim.q_est, ind_c, nc, base=start))
+            pats[start:stop] = ind_c @ pow2
+            start = stop
 
         pi_v, nu_v, fp_v, fn_v, points = _assemble_versions(
             n, fp0, fn0, q0, events, N)
-        starts = np.asarray([p[0] for p in points] + [N], np.int64)
-        ids = np.asarray([p[1] for p in points], np.int64)
-        ver_per_req = np.repeat(ids, np.diff(starts))
-
-        pow2 = 1 << np.arange(n, dtype=np.int64)
-        pats = (ind_all @ pow2).astype(np.int64)
+        for i, (s0, vid) in enumerate(points):
+            s1 = points[i + 1][0] if i + 1 < len(points) else N
+            ver_per_req[s0:s1] = vid
 
         return cls(
             key=cls.system_key(sim.cfg), n=n, trace_len=N,

@@ -145,18 +145,18 @@ def infer_format(path: Union[str, Path]) -> str:
     return "csv" if p.suffix.lower() == ".csv" else "keys"
 
 
-def _parse_keys(f: io.TextIOBase) -> list:
-    out = []
+def _iter_keys(f: io.TextIOBase):
+    """Yield raw key tokens of a ``keys``-format stream, one at a time."""
     for line in f:
         tok = line.strip()
         if not tok or tok.startswith("#"):
             continue
-        out.append(tok)
-    return out
+        yield tok
 
 
-def _parse_csv(f: io.TextIOBase, key_column: Union[int, str],
-               delimiter: str) -> list:
+def _iter_csv(f: io.TextIOBase, key_column: Union[int, str],
+              delimiter: str):
+    """Yield raw key tokens of a ``csv``-format stream, one at a time."""
     import csv as _csv
     reader = _csv.reader(f, delimiter=delimiter)
     if isinstance(key_column, str):
@@ -165,7 +165,7 @@ def _parse_csv(f: io.TextIOBase, key_column: Union[int, str],
         header = next((r for r in reader
                        if r and not r[0].startswith("#")), None)
         if header is None:
-            return []
+            return
         cols = [c.strip() for c in header]
         if key_column not in cols:
             raise ValueError(
@@ -173,7 +173,6 @@ def _parse_csv(f: io.TextIOBase, key_column: Union[int, str],
         col = cols.index(key_column)
     else:
         col = int(key_column)
-    out = []
     for row in reader:
         if not row or row[0].startswith("#"):
             continue
@@ -181,8 +180,16 @@ def _parse_csv(f: io.TextIOBase, key_column: Union[int, str],
             raise ValueError(
                 f"CSV row {reader.line_num} has {len(row)} column(s), "
                 f"key column is {col}")
-        out.append(row[col].strip())
-    return out
+        yield row[col].strip()
+
+
+def _parse_keys(f: io.TextIOBase) -> list:
+    return list(_iter_keys(f))
+
+
+def _parse_csv(f: io.TextIOBase, key_column: Union[int, str],
+               delimiter: str) -> list:
+    return list(_iter_csv(f, key_column, delimiter))
 
 
 def dense_remap(keys) -> np.ndarray:
@@ -199,21 +206,132 @@ def dense_remap(keys) -> np.ndarray:
     return rank[inv.reshape(-1)]
 
 
-def parse_trace_file(path: Union[str, Path], fmt: Optional[str] = None,
-                     key_column: Union[int, str] = 0,
-                     delimiter: str = ",") -> np.ndarray:
-    """Parse + dense-remap one log file (no cache, no subsampling)."""
+#: requests per chunk yielded by :func:`iter_trace_chunks` (and folded by
+#: the streaming statistics pass) when the caller does not choose one
+DEFAULT_CHUNK = 1 << 20
+
+
+def _remap_chunk(tokens: list, mapping: Dict[str, int]) -> np.ndarray:
+    """Dense-remap one chunk of raw key tokens against the cross-chunk
+    ``mapping`` (token -> id, mutated in place).  Ids are assigned in
+    global first-appearance order, so concatenating the chunk outputs is
+    bit-identical to :func:`dense_remap` over the whole token stream.
+    Only the chunk's DISTINCT tokens touch the dict — the bulk remap is
+    a vectorised table lookup."""
+    arr = np.asarray(tokens)
+    uniq, first, inv = np.unique(arr, return_index=True, return_inverse=True)
+    order = np.argsort(first, kind="stable")    # uniques by first appearance
+    lut = np.empty(uniq.shape[0], dtype=np.int64)
+    u_list = uniq.tolist()
+    for ui in order.tolist():
+        tok = u_list[ui]
+        nid = mapping.get(tok)
+        if nid is None:
+            mapping[tok] = nid = len(mapping)
+        lut[ui] = nid
+    return lut[inv.reshape(-1)]
+
+
+def iter_trace_chunks(path: Union[str, Path], fmt: Optional[str] = None,
+                      key_column: Union[int, str] = 0, delimiter: str = ",",
+                      chunk_size: int = DEFAULT_CHUNK,
+                      remap: Optional[Dict[str, int]] = None):
+    """Stream one log file as dense-remapped ``np.int64`` chunks.
+
+    The generator holds O(chunk + catalog) memory — one chunk of raw
+    tokens plus the token -> id dict — never the whole file.  The
+    concatenation of the yielded chunks is BIT-IDENTICAL to
+    :func:`parse_trace_file` on the same file: the dense remap is carried
+    incrementally across chunks in first-appearance order.
+
+    ``remap`` optionally supplies (and receives, mutated in place) the
+    carry dict, so a caller can continue one id space across several
+    files."""
     path = Path(path)
     fmt = fmt or infer_format(path)
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    mapping: Dict[str, int] = {} if remap is None else remap
     with _open_text(path) as f:
         if fmt == "keys":
-            keys = _parse_keys(f)
+            tokens = _iter_keys(f)
         elif fmt == "csv":
-            keys = _parse_csv(f, key_column, delimiter)
+            tokens = _iter_csv(f, key_column, delimiter)
         else:
             raise ValueError(f"unknown trace format {fmt!r}; "
                              f"known: 'keys', 'csv'")
-    return dense_remap(keys)
+        buf: list = []
+        for tok in tokens:
+            buf.append(tok)
+            if len(buf) >= chunk_size:
+                yield _remap_chunk(buf, mapping)
+                buf.clear()
+        if buf:
+            yield _remap_chunk(buf, mapping)
+
+
+def parse_trace_file(path: Union[str, Path], fmt: Optional[str] = None,
+                     key_column: Union[int, str] = 0,
+                     delimiter: str = ",") -> np.ndarray:
+    """Parse + dense-remap one log file (no cache, no subsampling).
+    Implemented on the chunked iterator, so the one-shot parse and the
+    streaming path share one id assignment by construction."""
+    chunks = list(iter_trace_chunks(path, fmt=fmt, key_column=key_column,
+                                    delimiter=delimiter))
+    if not chunks:
+        return np.empty(0, dtype=np.int64)
+    return np.concatenate(chunks)
+
+
+def stream_trace_info(path: Union[str, Path], *, fmt: Optional[str] = None,
+                      key_column: Union[int, str] = 0, delimiter: str = ",",
+                      head: Optional[int] = None, stride: int = 1,
+                      chunk_size: int = DEFAULT_CHUNK) -> TraceInfo:
+    """:class:`TraceInfo` in ONE streaming pass — no full-array
+    materialisation, O(chunk + catalog) memory.
+
+    Matches ``load_trace_file(..., with_info=True)[1]`` exactly
+    (including the top-1% concentration: the per-id request counts are
+    the same integers, so the shares are the same floats).  Subsampling
+    semantics mirror the loader: ``stride`` selects every stride-th
+    request of the FULL file, then ``head`` truncates — ids still
+    reflect full-file first-appearance order."""
+    path = Path(path)
+    fmt = fmt or infer_format(path)
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
+    counts = np.zeros(1024, dtype=np.int64)
+    n_sel = 0           # requests selected into the subsampled view
+    g = 0               # global request index (pre-subsample)
+    for chunk in iter_trace_chunks(path, fmt=fmt, key_column=key_column,
+                                   delimiter=delimiter,
+                                   chunk_size=chunk_size):
+        if stride > 1:
+            first = (-g) % stride
+            sel = chunk[first::stride]
+            rank0 = (g + first) // stride   # global rank of sel[0]
+        else:
+            sel, rank0 = chunk, g
+        if head is not None and sel.shape[0]:
+            sel = sel[:max(0, min(sel.shape[0], int(head) - rank0))]
+        if sel.shape[0]:
+            bc = np.bincount(sel)
+            if bc.shape[0] > counts.shape[0]:
+                grown = np.zeros(max(2 * counts.shape[0], bc.shape[0]),
+                                 dtype=np.int64)
+                grown[:counts.shape[0]] = counts
+                counts = grown
+            counts[:bc.shape[0]] += bc
+            n_sel += int(sel.shape[0])
+        g += int(chunk.shape[0])            # keep counting for the file total
+    nz = counts[counts > 0]
+    n_unique = int(nz.shape[0])
+    top = max(1, -(-n_unique // 100))       # ceil(n_unique / 100)
+    hottest = np.sort(nz)[::-1][:top]
+    share = float(hottest.sum() / n_sel) if n_sel else 0.0
+    return TraceInfo(path=str(path), fmt=fmt, n_requests=n_sel,
+                     n_unique=n_unique, n_requests_file=g,
+                     top1pct_ids=top, top1pct_share=share)
 
 
 # ---------------------------------------------------------------------------

@@ -7,14 +7,46 @@ On a pod, the same entry point runs the engine under the production mesh
 (decode shardings from launch/specs.py) with one router process per
 front-end; here it drives the full data path single-host: route -> probe ->
 (hit: reuse prefix KV | miss: real prefill) -> decode -> place.
+
+``--replay`` switches to the concurrent-client router replay harness
+(``repro.serving.replay``): N client threads drive a scenario-defined
+cluster regime (``--regime``) and the run reports throughput plus
+p50/p99 decision latency — model-free (stub KV payloads), so the numbers
+isolate the routing path the paper contributes.
+
+  PYTHONPATH=src python -m repro.launch.serve --replay \
+      --regime staggered_adverts --requests 8000 --clients 8 \
+      --batch-sizes 1,4,16 --json /tmp/replay.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 import numpy as np
+
+
+def _run_replay(args) -> int:
+    from repro.serving.replay import REGIMES, batch_sweep
+
+    batches = [int(b) for b in str(args.batch_sizes).split(",") if b]
+    reports = batch_sweep(args.regime, policy=args.policy,
+                          batch_sizes=batches, n_requests=args.requests,
+                          n_clients=args.clients, mode=args.mode,
+                          seed=args.seed)
+    for r in reports:
+        print(f"[replay] regime={r.regime} policy={r.policy} "
+              f"clients={r.n_clients} batch={r.batch_size} "
+              f"reqs={r.requests} rps={r.achieved_rps:,.0f} "
+              f"p50={r.p50_us:.1f}us p99={r.p99_us:.1f}us "
+              f"mean-cost={r.mean_cost:.2f} hit={r.hit_ratio:.3f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([r.to_dict() for r in reports], f, indent=1)
+        print(f"[replay] wrote {args.json}")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -33,7 +65,28 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-quant", action="store_true",
                     help="int8 prefix-KV caches (see EXPERIMENTS.md §Perf C3)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replay", action="store_true",
+                    help="concurrent-client router replay (model-free): "
+                         "throughput + p50/p99 decision latency")
+    ap.add_argument("--regime", default="hetero_tiers",
+                    help="--replay cluster regime (see "
+                         "repro.serving.replay.REGIMES)")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="--replay concurrent client count")
+    ap.add_argument("--batch-sizes", default="1",
+                    metavar="B[,B...]",
+                    help="--replay per-turn request batch sizes; several "
+                         "values sweep (fresh cluster each)")
+    ap.add_argument("--mode", choices=("threads", "sequential"),
+                    default="threads",
+                    help="--replay client model: threaded (live "
+                         "contention) or deterministic round-robin")
+    ap.add_argument("--json", default="",
+                    help="--replay: write the reports to this path")
     args = ap.parse_args(argv)
+
+    if args.replay:
+        return _run_replay(args)
 
     import dataclasses
 

@@ -5,6 +5,14 @@ from repro.serving.prefix_cache import (
     PrefixCacheNode,
     PrefixServeCluster,
 )
+from repro.serving.replay import (
+    REGIMES,
+    ReplayReport,
+    batch_sweep,
+    regime_config,
+    replay,
+)
 
 __all__ = ["ServeEngine", "PrefixCacheNode", "FNARouter", "PrefixServeCluster",
-           "ClusterConfig"]
+           "ClusterConfig", "REGIMES", "ReplayReport", "batch_sweep",
+           "regime_config", "replay"]

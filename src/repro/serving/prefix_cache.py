@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -46,15 +46,32 @@ from repro.core import (
 from repro.core.indicator import StaleIndicatorPair, hash_indices
 
 
+def _per_node(value, n: int, cast, name: str) -> tuple:
+    """Normalise a scalar-or-sequence node knob to an n-tuple (mirrors
+    ``SimConfig._per_cache``): a scalar broadcasts, a sequence must match
+    ``n_nodes`` — heterogeneous fleets (tiered capacities, staggered or
+    delayed advertisement cadences) set per-node sequences."""
+    if isinstance(value, (list, tuple, np.ndarray)):
+        vals = tuple(cast(v) for v in value)
+        if len(vals) != n:
+            raise ValueError(
+                f"{name} has {len(vals)} entries for {n} nodes")
+        return vals
+    return (cast(value),) * n
+
+
 @dataclass
 class ClusterConfig:
     n_nodes: int = 4
-    node_capacity: int = 512          # prefixes per node
+    # prefixes per node: scalar, or one value per node (tiered fleets)
+    node_capacity: Union[int, Sequence[int]] = 512
     probe_costs: Sequence[float] = ()  # default 1 + j
     miss_penalty: float = 100.0        # prefill recompute in probe-cost units
     bpe: float = 14.0
-    update_interval: int = 64          # insertions between advertisements
-    est_interval: int = 8
+    # insertions between advertisements: scalar, or per node (staggered /
+    # delayed-view regimes)
+    update_interval: Union[int, Sequence[int]] = 64
+    est_interval: Union[int, Sequence[int]] = 8
     q_horizon: int = 50
     q_delta: float = 0.25
     policy: str = "fna"                # fna | fna_cal | fno | pi
@@ -66,6 +83,25 @@ class ClusterConfig:
     def __post_init__(self):
         if not self.probe_costs:
             self.probe_costs = tuple(1.0 + j * 0.5 for j in range(self.n_nodes))
+        if len(self.probe_costs) != self.n_nodes:
+            raise ValueError(
+                f"probe_costs has {len(self.probe_costs)} entries for "
+                f"{self.n_nodes} nodes")
+
+    @property
+    def node_capacities(self) -> tuple:
+        return _per_node(self.node_capacity, self.n_nodes, int,
+                         "node_capacity")
+
+    @property
+    def update_intervals(self) -> tuple:
+        return _per_node(self.update_interval, self.n_nodes, int,
+                         "update_interval")
+
+    @property
+    def est_intervals(self) -> tuple:
+        return _per_node(self.est_interval, self.n_nodes, int,
+                         "est_interval")
 
 
 class PrefixCacheNode:
@@ -228,10 +264,12 @@ class PrefixServeCluster:
 
     def __init__(self, cfg: ClusterConfig, seed: int = 0):
         self.cfg = cfg
+        caps = cfg.node_capacities
+        advs, ests = cfg.update_intervals, cfg.est_intervals
         self.nodes = [
-            PrefixCacheNode(cfg.node_capacity, cfg.bpe, seed=seed * 100 + j,
-                            update_interval=cfg.update_interval,
-                            est_interval=cfg.est_interval)
+            PrefixCacheNode(caps[j], cfg.bpe, seed=seed * 100 + j,
+                            update_interval=advs[j],
+                            est_interval=ests[j])
             for j in range(cfg.n_nodes)
         ]
         self.router = FNARouter(cfg, self.nodes)

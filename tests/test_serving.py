@@ -69,3 +69,108 @@ def test_engine_prefix_reuse_consistency():
     t1, _ = eng.decode(jax.tree.map(lambda a: a, cache1), first, 4)
     t2, _ = eng.decode(cache2, first, 4)
     np.testing.assert_array_equal(t1, t2)
+
+
+# ---------------------------------------------------------------------------
+# Per-node cluster configuration (heterogeneous fleets)
+# ---------------------------------------------------------------------------
+
+def test_cluster_config_per_node_broadcast():
+    cfg = ClusterConfig(n_nodes=3, node_capacity=128,
+                        update_interval=(32, 128, 512), est_interval=8)
+    assert cfg.node_capacities == (128, 128, 128)
+    assert cfg.update_intervals == (32, 128, 512)
+    assert cfg.est_intervals == (8, 8, 8)
+    cluster = PrefixServeCluster(cfg)
+    assert [nd.update_interval for nd in cluster.nodes] == [32, 128, 512]
+    assert [nd.lru.capacity for nd in cluster.nodes] == [128, 128, 128]
+
+
+def test_cluster_config_per_node_wrong_length():
+    cfg = ClusterConfig(n_nodes=3, node_capacity=(64, 192))
+    with pytest.raises(ValueError, match="node_capacity"):
+        cfg.node_capacities
+
+
+# ---------------------------------------------------------------------------
+# Concurrent-client replay harness
+# ---------------------------------------------------------------------------
+
+def test_replay_regimes_cover_scenario_shapes():
+    from repro.serving import REGIMES, regime_config
+    assert {"hetero_tiers", "staggered_adverts", "delayed_view"} <= set(REGIMES)
+    cfg = regime_config("hetero_tiers", policy="fno")
+    assert cfg.policy == "fno"
+    assert len(set(cfg.node_capacities)) > 1      # genuinely tiered
+    with pytest.raises(KeyError):
+        regime_config("no_such_regime")
+
+
+def test_replay_sequential_deterministic():
+    """Fixed seed, sequential mode: two runs produce identical routing
+    outcomes — costs, hits, probe counts — down to the raw stats."""
+    from repro.serving import replay
+    kw = dict(policy="fna", n_requests=900, n_clients=3, batch_size=2,
+              mode="sequential", seed=5)
+    a = replay("staggered_adverts", **kw)
+    b = replay("staggered_adverts", **kw)
+    assert a.stats == b.stats
+    assert a.mean_cost == b.mean_cost
+    assert a.hit_ratio == b.hit_ratio
+    assert a.requests == b.requests == 900
+    assert 0 < a.p50_us <= a.p99_us
+
+
+def test_replay_threads_aggregate_stats():
+    """Threaded clients behind the router lock: arrival order is
+    scheduler-dependent but the aggregate accounting must balance."""
+    from repro.serving import replay
+    r = replay("delayed_view", policy="fna_cal", n_requests=800,
+               n_clients=4, batch_size=4, mode="threads", seed=1)
+    assert r.requests == r.stats["requests"] == 800
+    # every request either hit a probed KV or paid a prefill
+    assert round(r.hit_ratio * r.requests) + r.stats["prefills"] == 800
+    assert 0.0 <= r.hit_ratio <= 1.0
+    assert r.achieved_rps > 0
+    assert 0 < r.p50_us <= r.p99_us
+
+
+def test_replay_batch_sweep_smoke():
+    from repro.serving import batch_sweep
+    reports = batch_sweep("hetero_tiers", policy="fna",
+                          batch_sizes=(1, 4), n_requests=400,
+                          n_clients=2, mode="sequential", seed=0)
+    assert [r.batch_size for r in reports] == [1, 4]
+    # same total load per batch size (fresh cluster each)
+    assert len({r.requests for r in reports}) == 1
+    for r in reports:
+        d = r.to_dict()
+        assert d["regime"] == "hetero_tiers"
+        assert d["p50_us"] <= d["p99_us"]
+
+
+def test_replay_validation():
+    from repro.serving import replay
+    with pytest.raises(ValueError):
+        replay("hetero_tiers", batch_size=0)
+    with pytest.raises(ValueError):
+        replay("hetero_tiers", mode="warp")
+    from repro.serving.replay import client_streams
+    with pytest.raises(ValueError):
+        client_streams(100, 0)
+
+
+def test_serve_main_replay_argv(tmp_path, capsys):
+    """The --replay launcher path end to end (model-free: no engine or
+    JAX construction), including the JSON report artifact."""
+    from repro.launch.serve import main
+    out = tmp_path / "replay.json"
+    rc = main(["--replay", "--mode", "sequential", "--regime",
+               "delayed_view", "--requests", "300", "--clients", "3",
+               "--batch-sizes", "1,2", "--json", str(out)])
+    assert rc == 0
+    import json
+    reports = json.loads(out.read_text())
+    assert [r["batch_size"] for r in reports] == [1, 2]
+    assert all(r["regime"] == "delayed_view" for r in reports)
+    assert "[replay]" in capsys.readouterr().out

@@ -1,0 +1,279 @@
+"""Streaming phase-1 tests: chunked system sweeps, spill-backed outputs,
+chunked trace parsing, and single-pass trace statistics.
+
+The design invariant under test is *bit-identity*: the one-shot sweep is
+literally the chunk loop run once, so every chunked result — per-request
+arrays, view-version history, end-of-run node state including the PR-8
+advertisement counters and token balances — must equal the one-shot
+output exactly, for ANY chunk size, aligned with the advert cadences or
+not.  Same contract on the ingestion side: concatenated
+``iter_trace_chunks`` output equals ``parse_trace_file``, and
+``stream_trace_info`` equals the in-memory ``trace_info`` to the last
+float.
+"""
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.cachesim import SimConfig, SimResult, Simulator, get_scenario
+from repro.cachesim.scenarios import GOLDEN_SCENARIOS
+from repro.cachesim.store import ArtifactStore
+from repro.cachesim.sweep import hashable_label, run_grid
+from repro.cachesim.systemstate import SystemTrace
+from repro.cachesim.tracefiles import (
+    iter_trace_chunks,
+    load_trace_file,
+    parse_trace_file,
+    stream_trace_info,
+)
+from repro.cachesim.traces import get_trace
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+import make_trace_file  # noqa: E402
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+DATA = Path(__file__).parent / "data"
+RESULT_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
+
+#: the acceptance chunk sweep: degenerate (1), prime + cadence-hostile
+#: (7), and production-sized (4096)
+CHUNK_SIZES = (1, 7, 4096)
+
+#: system shapes whose carry-state differs: homogeneous baseline,
+#: heterogeneous tiers with staggered cadences, and both non-periodic
+#: advert policies (token buckets / delta encodings cross boundaries)
+SWEEP_CONFIGS = {
+    "scalar": dict(),
+    "hetero": dict(n_caches=3, cache_size=(500, 1_500, 3_000),
+                   costs=(1.0, 2.0, 4.0),
+                   update_interval=(64, 256, 1_024), est_interval=50),
+    "self_adjusting": dict(advert_policy="self_adjusting",
+                           advert_bandwidth=2.0, advert_threshold=0.05,
+                           cache_size=2_000, est_interval=50),
+    "delta": dict(advert_policy="delta", update_interval=128),
+}
+
+
+def _sweep_pair(cfg_name: str, chunk_size, n=3_000, spill=None):
+    trace = get_trace("gradle", n, seed=1)
+    cfg = SimConfig(engine="fast", **SWEEP_CONFIGS[cfg_name])
+    one = SystemTrace.compute(Simulator(cfg), trace)
+    chunked = SystemTrace.compute(Simulator(cfg), trace,
+                                  chunk_size=chunk_size, spill=spill)
+    return one, chunked
+
+
+def _assert_traces_equal(one: SystemTrace, chunked: SystemTrace, ctx):
+    a, b = one.to_arrays(), chunked.to_arrays()
+    assert set(a) == set(b), ctx
+    for k in a:
+        assert np.asarray(a[k]).tobytes() == np.asarray(b[k]).tobytes(), \
+            (ctx, k)
+    assert one.quality == chunked.quality, ctx
+
+
+# ---------------------------------------------------------------------------
+# Chunked system sweep == one-shot, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_size", CHUNK_SIZES)
+@pytest.mark.parametrize("cfg_name", sorted(SWEEP_CONFIGS))
+def test_chunked_compute_bit_identical(cfg_name, chunk_size):
+    one, chunked = _sweep_pair(cfg_name, chunk_size)
+    _assert_traces_equal(one, chunked, (cfg_name, chunk_size))
+
+
+def test_chunk_size_larger_than_trace():
+    one, chunked = _sweep_pair("hetero", 10 ** 9)
+    _assert_traces_equal(one, chunked, "oversized chunk")
+
+
+def test_chunk_size_validation():
+    trace = get_trace("gradle", 100, seed=0)
+    with pytest.raises(ValueError):
+        SystemTrace.compute(Simulator(SimConfig(engine="fast")), trace,
+                            chunk_size=0)
+
+
+def test_chunk_boundary_advert_counters_non_aligned():
+    """The end-of-run node snapshots — advertisement ordinals, drift-check
+    and estimate cadence counters, token-bucket balances — must cross
+    NON-ALIGNED chunk boundaries exactly (997 is coprime to every cadence
+    in play)."""
+    trace = get_trace("gradle", 4_000, seed=2)
+    cfg = SimConfig(engine="fast", n_caches=3,
+                    advert_policy="self_adjusting", advert_bandwidth=1.0,
+                    advert_threshold=0.05, advert_check=13,
+                    update_interval=(48, 48, 640), est_interval=50)
+    one = SystemTrace.compute(Simulator(cfg), trace)
+    chunked = SystemTrace.compute(Simulator(cfg), trace, chunk_size=997)
+    for j, (na, nb) in enumerate(zip(one.final_state["nodes"],
+                                     chunked.final_state["nodes"])):
+        for k in ("n_ins", "since_adv", "since_est", "since_chk",
+                  "adv_tokens", "version", "fp_est", "fn_est"):
+            assert na[k] == nb[k], (j, k)
+        assert na["adv_ins"] == nb["adv_ins"], j
+        assert na["adv_bytes"] == nb["adv_bytes"], j
+        assert np.array_equal(na["counters"], nb["counters"]), j
+        assert list(na["lru_keys"]) == list(nb["lru_keys"]), j
+    _assert_traces_equal(one, chunked, "non-aligned boundaries")
+
+
+@pytest.mark.parametrize("name", GOLDEN_SCENARIOS)
+def test_chunked_grid_matches_golden(name):
+    """Every committed golden (trace, cell, policy) result, reproduced by
+    the fast engine with a CHUNKED phase-1 sweep."""
+    payload = json.loads((GOLDEN_DIR / f"{name}.json").read_text())
+    sc = get_scenario(name)
+    traces, values = sc.golden_grid()
+    base = sc.config(engine="fast", **sc.golden_base)
+    grid = run_grid(traces, base, sc.axis, values, policies=sc.policies,
+                    share_system=True, chunk_size=4096)
+    for cell in payload["cells"]:
+        res = grid[(cell["trace"], hashable_label(cell["label"]))]
+        for f in RESULT_FIELDS:
+            got = getattr(res[cell["policy"]], f)
+            assert got == cell["result"][f], \
+                (name, cell["trace"], cell["label"], cell["policy"], f)
+
+
+@pytest.mark.parametrize("chunk_size", CHUNK_SIZES)
+def test_chunked_grid_chunk_sweep_staggered(chunk_size):
+    """One cadence-heavy golden scenario across the full acceptance chunk
+    sweep {1, 7, 4096} (the other scenarios run at 4096 above)."""
+    name = "staggered_adverts"
+    payload = json.loads((GOLDEN_DIR / f"{name}.json").read_text())
+    sc = get_scenario(name)
+    traces, values = sc.golden_grid()
+    base = sc.config(engine="fast", **sc.golden_base)
+    grid = run_grid(traces, base, sc.axis, values, policies=sc.policies,
+                    share_system=True, chunk_size=chunk_size)
+    for cell in payload["cells"]:
+        res = grid[(cell["trace"], hashable_label(cell["label"]))]
+        for f in RESULT_FIELDS:
+            got = getattr(res[cell["policy"]], f)
+            assert got == cell["result"][f], \
+                (chunk_size, cell["label"], cell["policy"], f)
+
+
+def test_simulator_run_chunked_result_identical():
+    """The full three-phase result (not just the sweep) is unchanged
+    under chunking, through the public Simulator.run."""
+    trace = get_trace("scarab", 3_000, seed=3)
+    for policy in ("fna", "fna_cal"):
+        cfg = SimConfig(engine="fast", policy=policy)
+        a = Simulator(cfg).run(trace)
+        b = Simulator(cfg).run(trace, chunk_size=7)
+        for f in RESULT_FIELDS:
+            assert getattr(a, f) == getattr(b, f), (policy, f)
+
+
+# ---------------------------------------------------------------------------
+# Spill: memmap-backed per-request arrays
+# ---------------------------------------------------------------------------
+
+def test_spill_outputs_memmap_backed(tmp_path):
+    one, chunked = _sweep_pair("hetero", 512, spill=tmp_path)
+    assert isinstance(chunked.ind_all, np.memmap)
+    assert isinstance(chunked.dj_all, np.memmap)
+    _assert_traces_equal(one, chunked, "spill path")
+    # the backing .npy files live under the caller-owned directory
+    assert any(tmp_path.rglob("*.npy"))
+
+
+def test_spill_via_artifact_store(tmp_path):
+    store = ArtifactStore(tmp_path / "store")
+    one, chunked = _sweep_pair("scalar", 997, spill=store)
+    assert isinstance(chunked.ind_all, np.memmap)
+    _assert_traces_equal(one, chunked, "store spill")
+    spill_root = Path(store.root) / "spill"
+    assert spill_root.exists() and any(spill_root.rglob("*.npy"))
+    # scratch space is invisible to the store's entry machinery
+    assert store.entries() == []
+
+
+def test_spill_dir_unique_per_call(tmp_path):
+    store = ArtifactStore(tmp_path)
+    assert store.spill_dir() != store.spill_dir()
+
+
+# ---------------------------------------------------------------------------
+# Chunked parsing == one-shot parsing, on the committed sample logs
+# ---------------------------------------------------------------------------
+
+SAMPLES = (
+    ("sample_recency.log.gz", {}),
+    ("sample_zipf.csv.gz", {"key_column": "key"}),
+)
+
+
+@pytest.mark.parametrize("fname,kw", SAMPLES)
+@pytest.mark.parametrize("chunk_size", (1, 7, 997, 1 << 20))
+def test_iter_trace_chunks_concat_identical(fname, kw, chunk_size):
+    path = DATA / fname
+    one = parse_trace_file(path, **kw)
+    chunks = list(iter_trace_chunks(path, chunk_size=chunk_size, **kw))
+    assert all(c.dtype == np.int64 for c in chunks)
+    assert np.array_equal(np.concatenate(chunks), one)
+    # and the loader (modulo its cache) agrees
+    assert np.array_equal(load_trace_file(path, cache=False, **kw), one)
+
+
+def test_iter_trace_chunks_carry_remap_across_files(tmp_path):
+    """An externally supplied remap dict continues one id space across
+    several files — the multi-file-log use case."""
+    a = get_trace("gradle", 1_000, seed=9)
+    b = get_trace("gradle", 1_000, seed=10)
+    pa = make_trace_file.write_trace_file(a, tmp_path / "a.log", "keys")
+    pb = make_trace_file.write_trace_file(b, tmp_path / "b.log", "keys")
+    mapping = {}
+    got = np.concatenate(
+        list(iter_trace_chunks(pa, chunk_size=128, remap=mapping)) +
+        list(iter_trace_chunks(pb, chunk_size=128, remap=mapping)))
+    pc = make_trace_file.write_trace_file(np.concatenate([a, b]),
+                                          tmp_path / "c.log", "keys")
+    assert np.array_equal(got, parse_trace_file(pc))
+
+
+@pytest.mark.parametrize("fname,kw", SAMPLES)
+@pytest.mark.parametrize("head,stride", ((None, 1), (1_000, 1), (None, 3),
+                                         (500, 7), (0, 2)))
+def test_stream_trace_info_exact(fname, kw, head, stride):
+    path = DATA / fname
+    _, want = load_trace_file(path, cache=False, with_info=True,
+                              head=head, stride=stride, **kw)
+    got = stream_trace_info(path, head=head, stride=stride,
+                            chunk_size=997, **kw)
+    # dataclass equality: every field, top1pct_share to the last float
+    assert got == want
+
+
+def test_stream_trace_info_validation():
+    with pytest.raises(ValueError):
+        stream_trace_info(DATA / "sample_recency.log.gz", stride=0)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-written trace files: byte-reproducible at any write chunking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ("keys", "csv"))
+@pytest.mark.parametrize("compress", (False, True))
+def test_write_trace_file_chunking_invariant(tmp_path, monkeypatch, fmt,
+                                             compress):
+    ids = get_trace("wiki", 3_000, seed=4, catalog=800)
+    # identical basenames: gzip embeds the output name in its header
+    p1 = make_trace_file.write_trace_file(ids, tmp_path / "a" / "t.log",
+                                          fmt, compress=compress)
+    monkeypatch.setattr(make_trace_file, "WRITE_CHUNK", 7)
+    p2 = make_trace_file.write_trace_file(ids, tmp_path / "b" / "t.log",
+                                          fmt, compress=compress)
+    assert p1.read_bytes() == p2.read_bytes()
+    # and regeneration is deterministic outright (gzip mtime zeroed)
+    p3 = make_trace_file.write_trace_file(ids, tmp_path / "c" / "t.log",
+                                          fmt, compress=compress)
+    assert p1.read_bytes() == p3.read_bytes()
