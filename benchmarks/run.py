@@ -152,6 +152,15 @@ def sim_advert_benches(full: bool):
     return run_advert_benches(full)
 
 
+def sim_topology_benches(full: bool):
+    """Hierarchical topologies (``repro.cachesim.topology``): 3-level
+    tree throughput on the Fig. 3 workload plus the
+    ``topology_sweep_amortisation`` ratio — shared per-tier sweeps vs
+    per-cell recompute across a topology axis (CI-gated >= 2x)."""
+    from benchmarks.sim import run_topology_benches
+    return run_topology_benches(full)
+
+
 def sim_ingest_benches(full: bool):
     """Streaming trace ingestion: 10M-request log generation, one-shot vs
     streaming statistics in isolated child processes, and the
@@ -177,16 +186,17 @@ def router_replay_bench(full: bool):
     return run_replay_benches(full)
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale parameters")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of sections to run")
     ap.add_argument("--interpret", choices=("auto", "on", "off"), default="auto",
                     help="Pallas interpret mode for kernel benches "
                          "(auto = from JAX backend: compiled on TPU)")
     ap.add_argument("--json", default="",
                     help="also write records to this path as JSON")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     interpret = {"auto": None, "on": True, "off": False}[args.interpret]
 
@@ -198,10 +208,17 @@ def main() -> None:
         "sim_jax": sim_jax_benches,
         "sim_store": sim_store_benches,
         "sim_advert": sim_advert_benches,
+        "sim_topology": sim_topology_benches,
         "sim_ingest": sim_ingest_benches,
         "serving": serving_bench,
         "router_replay": router_replay_bench,
     }
+    if only:
+        unknown = sorted(only - set(sections))
+        if unknown:
+            # a typo'd --only used to run NOTHING and exit 0 — fail loudly
+            ap.error(f"unknown --only section(s): {', '.join(unknown)} "
+                     f"(valid: {', '.join(sections)})")
     records = []
     print("name,us_per_call,derived")
     for sec, fn in sections.items():

@@ -43,6 +43,15 @@ reports its own ``ru_maxrss`` process high-water, so the
 this <= 0.5) measures the paths in isolation rather than whichever
 allocator high-water the bench process accumulated first.
 
+``run_topology_benches`` (section ``sim_topology``) covers the
+hierarchical-topology tier (``repro.cachesim.topology``):
+``sim_topology_tree`` — requests/sec through a 3-level fanout-2 tree on
+the Fig. 3 workload — and ``topology_sweep_amortisation`` — the same
+tree swept along a decision-side ``hop_penalty`` axis with one shared
+:class:`SweepPool` vs per-cell recompute, with an inline bit-identity
+assert between the two grids (CI gates this >= 2: cross-cell tier-sweep
+sharing must at least halve the grid's wall-clock).
+
 ``run_advert_benches`` (section ``sim_advert``) covers the
 advertisement-event subsystem (``repro.cachesim.advert``): per-bandwidth
 ``advert_pareto_bw*`` rows compare the self-adjusting policy's cost
@@ -484,4 +493,65 @@ def run_store_benches(full: bool):
                 dt_par / (n_par * len(intervals)) * 1e6, dt_ser / dt_par,
                 {"n_requests": n_par, "groups": len(intervals),
                  "workers": workers}))
+    return out
+
+
+def run_topology_benches(full: bool):
+    """Hierarchical-topology rows (section ``sim_topology``); see the
+    module docstring."""
+    from repro.cachesim import SimConfig, get_trace
+    from repro.cachesim.topology import TopoConfig, run_topo_grid, run_topology
+
+    out = []
+    n_req = 100_000 if full else 40_000
+    traces = {"gradle": get_trace("gradle", n_req, seed=0)}
+    base = TopoConfig(
+        base=SimConfig(engine="fast", update_interval=200),
+        kind="tree", depth=3, fanout=2,
+        tiers=(dict(cache_size=2_000, update_interval=100,
+                    tier_latency=1.0),
+               dict(cache_size=6_000, update_interval=200,
+                    tier_latency=4.0),
+               dict(cache_size=12_000, update_interval=400,
+                    tier_latency=16.0)),
+        origin_latency=64.0)
+
+    # --- tree throughput: one 3-level fanout-2 cell, full policy panel
+    policies = ("fna", "fna_cal", "fno", "pi")
+    t0 = time.time()
+    run_topology(traces["gradle"], base, policies)   # warm caches
+    t0 = time.time()
+    run_topology(traces["gradle"], base, policies)
+    dt = time.time() - t0
+    out.append(("sim_topology_tree", dt / n_req * 1e6, n_req / dt,
+                {"n_requests": n_req, "depth": base.depth,
+                 "fanout": base.fanout, "policies": len(policies)}))
+
+    # --- cross-cell sweep amortisation: hop_penalty is decision-side
+    # (outside every tier's system key), so the shared pool computes the
+    # 7 tier sweeps ONCE for the whole axis and replays per cell, while
+    # share_system=False recomputes them per cell.  fna + pi keep the
+    # replay side cheap so the ratio isolates the sweep sharing
+    amort_policies = ("fna", "pi")
+    penalties = (0.0, 2.0, 8.0, 32.0)
+
+    def _time_axis(share: bool):
+        t0 = time.time()
+        grid = run_topo_grid(traces, base, "hop_penalty", penalties,
+                             policies=amort_policies, share_system=share)
+        return time.time() - t0, grid
+
+    _time_axis(True)                                 # warm caches
+    dt_shared, grid_shared = min((_time_axis(True) for _ in range(2)),
+                                 key=lambda r: r[0])
+    dt_cold, grid_cold = min((_time_axis(False) for _ in range(2)),
+                             key=lambda r: r[0])
+    assert grid_shared == grid_cold, \
+        "shared-pool topology grid drifted off per-cell recompute"
+    out.append(("topology_sweep_amortisation",
+                dt_shared / (n_req * len(penalties)) * 1e6,
+                dt_cold / dt_shared,
+                {"n_requests": n_req, "cells": len(penalties),
+                 "policies": len(amort_policies), "depth": base.depth,
+                 "fanout": base.fanout}))
     return out

@@ -13,6 +13,12 @@ experiment configurations (paper Figs. 1, 3-7 plus heterogeneous
 beyond-paper regimes) that drive ``benchmarks/paper_figs.py`` and the
 golden differential suite.  See the ``repro.cachesim.simulator`` module
 docstring for the invariant statement.
+
+``repro.cachesim.topology`` composes the same engine into hierarchical
+PATH/TREE topologies of tier nodes (``TopoConfig`` + ``run_topology``) —
+a residency miss at depth d re-enters the identical one-hop system at
+depth d + 1 — with per-tier sweeps shared across grid cells and depths
+(``docs/topology.md``).
 """
 from repro.cachesim.engine import (
     DecisionPlan,
@@ -35,6 +41,14 @@ from repro.cachesim.simulator import SimConfig, SimResult, Simulator, run_polici
 from repro.cachesim.store import ArtifactStore
 from repro.cachesim.sweep import run_grid, run_sweep, sweep_records
 from repro.cachesim.systemstate import SystemTrace
+from repro.cachesim.topology import (
+    TierSpec,
+    TierSystem,
+    TopoConfig,
+    TopoResult,
+    run_topo_grid,
+    run_topology,
+)
 from repro.cachesim.tracefiles import (
     TraceInfo,
     load_trace_file,
@@ -51,4 +65,6 @@ __all__ = ["ArtifactStore",
            "TraceInfo", "load_trace_file", "register_trace_file",
            "trace_info",
            "DecisionPlan", "TablePlan", "PROVIDERS", "plan_for",
-           "register_provider", "run_cells"]
+           "register_provider", "run_cells",
+           "TierSpec", "TierSystem", "TopoConfig", "TopoResult",
+           "run_topology", "run_topo_grid"]

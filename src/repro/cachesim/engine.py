@@ -81,10 +81,21 @@ class DecisionPlan:
         """Whether this plan covers ``cfg`` (policy, subroutine, budget)."""
         raise NotImplementedError
 
+    def selections(self, sim, st) -> np.ndarray:
+        """[N] int64 per-request selection bitmasks for ``sim`` against
+        the shared sweep ``st`` — the committed (post-exploration) cache
+        subset probed for each request, bit j = cache j.  This is the
+        one-hop decision interface: the flat replay folds it into a
+        SimResult below, and ``repro.cachesim.topology`` re-accounts the
+        same masks under per-tier penalties/latencies."""
+        raise NotImplementedError
+
     def replay(self, sim, st, res):
         """Phase 2+3: produce per-request selections for ``sim`` against
         the shared sweep ``st`` and fold them into ``res``."""
-        raise NotImplementedError
+        from repro.cachesim.fastpath import accumulate_replay
+        return accumulate_replay(res, st, self.selections(sim, st),
+                                 list(sim.cfg.costs), sim.cfg.miss_penalty)
 
 
 class TablePlan(DecisionPlan):
@@ -102,8 +113,7 @@ class TablePlan(DecisionPlan):
         """[V * 2^n] int64 selection bitmasks, row (v * 2^n + p)."""
         raise NotImplementedError
 
-    def replay(self, sim, st, res):
-        from repro.cachesim.fastpath import accumulate_replay
+    def selections(self, sim, st) -> np.ndarray:
         cfg = sim.cfg
         key = self.cache_key(cfg)
         selm_tab = st.plan_cache.get(key)
@@ -111,9 +121,7 @@ class TablePlan(DecisionPlan):
             selm_tab = self.tables(sim, st)
             st.plan_cache[key] = selm_tab
         k = 1 << st.n
-        selm = selm_tab[st.ver_per_req * k + st.pats]            # [N]
-        return accumulate_replay(res, st, selm, list(cfg.costs),
-                                 cfg.miss_penalty)
+        return selm_tab[st.ver_per_req * k + st.pats]            # [N]
 
 
 # ---------------------------------------------------------------------------
@@ -136,37 +144,26 @@ class FnaCalSegmented(DecisionPlan):
         return cfg.alg != "exhaustive" or \
             cfg.n_caches <= MAX_EXHAUSTIVE_TABLE_CACHES
 
-    def replay(self, sim, st, res):
-        from repro.cachesim.fna_cal_fast import replay_fna_cal
-        return replay_fna_cal(sim, st, res)
+    def selections(self, sim, st) -> np.ndarray:
+        from repro.cachesim.fna_cal_fast import fna_cal_selections
+        return fna_cal_selections(sim, st)
 
 
 class PiReplay(DecisionPlan):
     """PI accesses the cheapest cache truly holding x; hash placement
-    means only the designated cache can — so membership IS the plan."""
+    means only the designated cache can — so membership IS the plan:
+    probe the designated cache iff it truly holds x, nothing otherwise.
+    The default selections-fold replay is bit-identical to a dedicated
+    one: a single-cache mask costs exactly ``costs[dj]``, the empty mask
+    exactly ``0.0 + miss_penalty == miss_penalty``."""
 
     name = "pi"
 
     def matches(self, cfg) -> bool:
         return cfg.policy == "pi"
 
-    def replay(self, sim, st, res):
-        costs = list(sim.cfg.costs)
-        M = sim.cfg.miss_penalty
-        cost_arr = np.where(st.in_dj,
-                            np.asarray(costs, np.float64)[st.dj_all], M)
-        hits = int(np.count_nonzero(st.in_dj))
-        posm = ((st.pats >> st.dj_all) & 1).astype(bool) & st.in_dj
-        pos_acc = int(np.count_nonzero(posm))
-        total_cost = res.total_cost
-        for c in cost_arr.tolist():
-            total_cost += c
-        res.total_cost = total_cost
-        res.hits += hits
-        res.pos_accesses += pos_acc
-        res.neg_accesses += hits - pos_acc
-        res.n_requests += st.trace_len
-        return res
+    def selections(self, sim, st) -> np.ndarray:
+        return np.where(st.in_dj, np.int64(1) << st.dj_all, np.int64(0))
 
 
 class HocsTables(TablePlan):

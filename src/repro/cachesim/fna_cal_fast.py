@@ -80,6 +80,18 @@ _MAX_SEG_VERSIONS = 16
 
 
 def replay_fna_cal(sim, st: SystemTrace, res):
+    """Full fna_cal fast replay: committed selections + the shared fold."""
+    from repro.cachesim.fastpath import accumulate_replay
+    return accumulate_replay(res, st, fna_cal_selections(sim, st),
+                             [float(c) for c in sim.cfg.costs],
+                             float(sim.cfg.miss_penalty))
+
+
+def fna_cal_selections(sim, st: SystemTrace) -> np.ndarray:
+    """[N] committed (post-exploration) selection bitmasks for fna_cal —
+    the speculate/verify/bridge engine described in the module docstring,
+    minus the cost fold.  Exposed separately so the topology layer can
+    re-account the same decisions under per-tier penalties."""
     cfg = sim.cfg
     n = st.n
     N = st.trace_len
@@ -313,5 +325,4 @@ def replay_fna_cal(sim, st: SystemTrace, res):
             window = 0 if commit < _BURST_COMMIT \
                 else min(max(2 * commit, _SPEC_MIN_WINDOW), _MAX_WINDOW)
 
-    from repro.cachesim.fastpath import accumulate_replay
-    return accumulate_replay(res, st, selm, costs, M)
+    return selm

@@ -80,13 +80,24 @@ class Scenario:
     golden_traces: Optional[tuple] = None   # default: first trace
     golden_base: Mapping = field(default_factory=dict)   # extra overrides
     golden_n_requests: int = 5_000
+    # --- hierarchical scenarios (repro.cachesim.topology): TopoConfig
+    # kwargs beyond ``base`` (kind, depth, fanout, per-tier mappings,
+    # origin knobs).  None/empty -> the flat single-hop system ----------
+    topology: Optional[Mapping] = None
 
-    def config(self, **overrides) -> SimConfig:
-        """The cell-independent base SimConfig (+ ad-hoc overrides)."""
+    def config(self, **overrides):
+        """The cell-independent base config (+ ad-hoc SimConfig
+        overrides): a ``SimConfig``, or — for hierarchical scenarios —
+        a ``TopoConfig`` wrapping it (``run_grid`` dispatches on the
+        type)."""
         kw = dict(self.base)
         kw.update(overrides)
         kw.setdefault("seed", self.seed)
-        return SimConfig(**kw)
+        cfg = SimConfig(**kw)
+        if not self.topology:
+            return cfg
+        from repro.cachesim.topology import TopoConfig
+        return TopoConfig(base=cfg, **self.topology)
 
     def make_traces(self, n_requests: int,
                     names: Optional[Sequence[str]] = None) -> Dict:
@@ -456,6 +467,65 @@ _scenario(
 )
 
 # ===========================================================================
+# Hierarchical topologies (repro.cachesim.topology; ROADMAP item 3)
+# ===========================================================================
+
+_scenario(
+    name="topo_path",
+    figure="beyond",
+    description="A PATH hierarchy on the recency-biased gradle workload: "
+                "edge / regional / origin-side tiers with growing caches, "
+                "slowing advertisement cadences, per-hop forward "
+                "penalties, an admission queue at the middle tier and "
+                "per-tier service latencies — normalised cost, mean "
+                "latency and rejection rate vs hierarchy depth (depth 1 "
+                "is the flat paper system).",
+    traces=("gradle",),
+    axis="depth",
+    values=(1, 2, 3),
+    base=dict(),
+    topology=dict(
+        kind="path", depth=3,
+        tiers=(
+            dict(cache_size=800, update_interval=150, tier_latency=1.0,
+                 hop_penalty=5.0),
+            dict(cache_size=2_000, update_interval=300, tier_latency=4.0,
+                 hop_penalty=10.0, queue_capacity=36, queue_window=40),
+            dict(cache_size=4_000, update_interval=600,
+                 tier_latency=16.0),
+        ),
+        origin_latency=64.0),
+    golden_values=(1, 3),
+)
+
+_scenario(
+    name="topo_tree",
+    figure="beyond",
+    description="A 3-level TREE hierarchy (leaf edge caches fanning into "
+                "regional parents into one root) on gradle: leaf "
+                "admission queues reject a slice of arrivals, misses "
+                "merge upward in trace order — cost/latency/rejection vs "
+                "fan-out.",
+    traces=("gradle",),
+    axis="fanout",
+    values=(2, 3),
+    base=dict(),
+    topology=dict(
+        kind="tree", depth=3, fanout=2,
+        tiers=(
+            dict(cache_size=150, update_interval=40, tier_latency=1.0,
+                 hop_penalty=5.0, queue_capacity=45, queue_window=50),
+            dict(cache_size=400, update_interval=80, tier_latency=4.0,
+                 hop_penalty=10.0),
+            dict(cache_size=800, update_interval=150,
+                 tier_latency=16.0),
+        ),
+        origin_latency=64.0),
+    n_requests=40_000,
+    golden_n_requests=4_000,
+)
+
+# ===========================================================================
 # File-backed traces (repro.cachesim.tracefiles)
 # ===========================================================================
 
@@ -496,4 +566,5 @@ GOLDEN_SCENARIOS = (
     "fig7_num_caches", "hetero_tiers", "staggered_adverts", "delayed_view",
     "advert_budget", "advert_delta",
     "exhaustive_small", "heavy_skew", "trace_file_smoke",
+    "topo_path", "topo_tree",
 )

@@ -64,7 +64,13 @@ import numpy as np
 #: table payload shape) changes — old entries then miss by construction.
 #: v2: advert-event subsystem (per-node advert streams + token-bucket
 #: state in the sweep snapshot; system_key grew the advert spec)
-SCHEMA_VERSION = 2
+#: v3: hierarchical topologies (``repro.cachesim.topology``) — the sweep
+#: payload gained ``fwd_pos``, the forwarded residency-miss positions a
+#: parent tier consumes; per-tier sweeps are stored under the SAME
+#: (trace digest, system key) scheme, keyed by each tier's own arrival
+#: stream, so one stored tier is reused by every topology cell (and
+#: depth) that routes the same stream into the same system config
+SCHEMA_VERSION = 3
 
 #: environment variable naming the default store root (CLI + tracefiles)
 ENV_VAR = "REPRO_STORE"

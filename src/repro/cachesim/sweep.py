@@ -184,9 +184,21 @@ def run_grid(traces: Union[Mapping[str, np.ndarray], Sequence[str]],
     """
     from repro.cachesim.engine import plan_for, run_cells
     from repro.cachesim.store import as_store
+    from repro.cachesim.topology import TopoConfig, run_topo_grid
     if not isinstance(traces, Mapping):
         traces = {name: get_trace(name, n_requests, seed=base.seed)
                   for name in traces}
+    if isinstance(base, TopoConfig):
+        # hierarchical grids (repro.cachesim.topology): topology axes
+        # (depth, fanout, per-tier penalty/cadence/queue knobs) or
+        # SimConfig axes broadcast through the shared base; per-tier
+        # sweeps are shared across cells (and depths) through one
+        # store-backed pool.  ``backend``/``mesh``/``workers`` do not
+        # apply — per-tier grids prefetch nothing batched yet.
+        return run_topo_grid(traces, base, axis, values,
+                             policies=policies,
+                             share_system=share_system, store=store,
+                             chunk_size=chunk_size)
     # classify cells by the policy-independent system key: cells of a
     # decision-side axis all share one key (and thus ONE SystemTrace
     # per trace); system-side cells each form their own group

@@ -363,6 +363,8 @@ class SystemTrace:
     # ``repro.cachesim.engine`` and by the sweep runner's stacked
     # cross-cell prefetch, read back at replay time
     plan_cache: Dict[tuple, np.ndarray] = field(default_factory=dict)
+    # forwarded-stream positions (see forward_positions); None = derive
+    _fwd_pos: Optional[np.ndarray] = None
 
     # -- construction ------------------------------------------------------
 
@@ -407,8 +409,10 @@ class SystemTrace:
         nodes = sim.nodes
         N = int(trace.shape[0])
         fresh = _is_fresh(sim)
-        if chunk_size is not None and int(chunk_size) < 1:
-            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if chunk_size is not None:
+            # same contract as iter_trace_chunks: reject early, by name
+            from repro.cachesim.tracefiles import validate_chunk_size
+            validate_chunk_size(chunk_size)
         step = N if chunk_size is None else min(int(chunk_size), N)
 
         # view inputs at entry — events below record every later change
@@ -491,6 +495,23 @@ class SystemTrace:
             } for qe in sim.q_est],
         }
 
+    # -- topology composition ----------------------------------------------
+
+    def forward_positions(self) -> np.ndarray:
+        """Positions (indices into THIS sweep's arrival stream) of the
+        requests NOT resident in their designated cache — the
+        residency-miss subsequence a parent tier receives when this
+        sweep's system is one hop of a hierarchy
+        (``repro.cachesim.topology``).  Hash-designated placement makes
+        it policy-independent, so the forwarded stream — and with it
+        every deeper tier's sweep — is shareable across policies and
+        topology cells exactly like the sweep itself.  Derived lazily
+        from ``in_dj`` and memoised; stored in the schema-v3 ``.npz``
+        payload so hydrated sweeps skip the scan."""
+        if self._fwd_pos is None:
+            self._fwd_pos = np.flatnonzero(~self.in_dj).astype(np.int64)
+        return self._fwd_pos
+
     # -- serialisation (the content-addressed artifact store) --------------
 
     def to_arrays(self) -> Dict[str, np.ndarray]:
@@ -524,6 +545,7 @@ class SystemTrace:
             "ind_all": self.ind_all, "in_dj": self.in_dj,
             "dj_all": self.dj_all, "pats": self.pats,
             "ver_per_req": self.ver_per_req,
+            "fwd_pos": self.forward_positions(),
             "pi_v": self.pi_v, "nu_v": self.nu_v,
             "fp_v": self.fp_v, "fn_v": self.fn_v,
             "quality": np.asarray([self.quality[k] for k in _QUALITY_KEYS],
@@ -615,7 +637,9 @@ class SystemTrace:
             fp_v=np.ascontiguousarray(arrays["fp_v"], np.float64),
             fn_v=np.ascontiguousarray(arrays["fn_v"], np.float64),
             quality=quality, final_state=final_state,
-            from_fresh=bool(arrays["from_fresh"]), _trace=trace)
+            from_fresh=bool(arrays["from_fresh"]), _trace=trace,
+            _fwd_pos=(np.ascontiguousarray(arrays["fwd_pos"], np.int64)
+                      if "fwd_pos" in arrays else None))
 
     # -- reuse -------------------------------------------------------------
 

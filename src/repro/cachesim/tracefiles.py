@@ -246,11 +246,30 @@ def iter_trace_chunks(path: Union[str, Path], fmt: Optional[str] = None,
 
     ``remap`` optionally supplies (and receives, mutated in place) the
     carry dict, so a caller can continue one id space across several
-    files."""
-    path = Path(path)
-    fmt = fmt or infer_format(path)
+    files.
+
+    A plain function returning the generator (not a generator itself) so
+    a bad ``chunk_size`` raises HERE, at the call site, not at the first
+    ``next()`` deep inside a consumer loop."""
+    validate_chunk_size(chunk_size)
+    return _iter_trace_chunks(Path(path), fmt, key_column, delimiter,
+                              chunk_size, remap)
+
+
+def validate_chunk_size(chunk_size) -> None:
+    """Reject a non-int or < 1 ``chunk_size`` with a ValueError naming
+    the argument (bool is an int subclass — reject it explicitly)."""
+    if isinstance(chunk_size, bool) or \
+            not isinstance(chunk_size, (int, np.integer)):
+        raise ValueError(
+            f"chunk_size must be an int >= 1, got {chunk_size!r}")
     if chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+
+
+def _iter_trace_chunks(path: Path, fmt, key_column, delimiter, chunk_size,
+                       remap):
+    fmt = fmt or infer_format(path)
     mapping: Dict[str, int] = {} if remap is None else remap
     with _open_text(path) as f:
         if fmt == "keys":

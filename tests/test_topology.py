@@ -1,0 +1,305 @@
+"""Hierarchical cache topologies (``repro.cachesim.topology``).
+
+The load-bearing property is DEGENERACY: a depth-1 PATH with zero hop
+knobs is the flat engine, bit for bit — every pre-existing golden
+scenario x policy reproduces through the ``TierSystem`` path exactly.
+On top of that: fast == reference on deep paths/trees (hand-sized
+here; the pinned cells live in the ``topo_path`` / ``topo_tree`` golden
+files), hand-computed queue/latency/origin accounting, cross-cell tier
+sweep sharing (observed via ``SWEEPS_COMPUTED`` and the artifact
+store), and the satellite validations (``chunk_size``, benchmark
+``--only``).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.cachesim import SimConfig, SimResult, Simulator, get_scenario
+from repro.cachesim.scenarios import GOLDEN_SCENARIOS
+from repro.cachesim.simulator import run_policies
+from repro.cachesim.store import ArtifactStore
+from repro.cachesim.sweep import cell_label, hashable_label, run_grid
+from repro.cachesim.systemstate import SystemTrace
+from repro.cachesim.topology import (
+    TopoConfig,
+    TopoResult,
+    edge_assignment,
+    run_topo_grid,
+    run_topology,
+    topo_cell,
+)
+from repro.cachesim.traces import get_trace
+import repro.cachesim.systemstate as systemstate
+
+REPO = Path(__file__).resolve().parent.parent
+GOLDEN_DIR = Path(__file__).parent / "golden"
+SIM_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
+
+#: the pre-existing flat golden scenarios (topology ones excluded —
+#: those pin TopoResult cells directly)
+FLAT_GOLDEN = tuple(n for n in GOLDEN_SCENARIOS
+                    if get_scenario(n).topology is None)
+
+
+def _wrap_depth1(cfg: SimConfig) -> TopoConfig:
+    """The degenerate hierarchy: one tier, no knobs — must BE ``cfg``."""
+    return TopoConfig(base=cfg, kind="path", depth=1)
+
+
+# ---------------------------------------------------------------------------
+# Degeneracy: depth-1 PATH == flat engine, on every flat golden scenario
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", FLAT_GOLDEN)
+def test_depth1_path_reproduces_flat_golden(name):
+    """Every committed flat (trace, cell, policy) SimResult accumulator,
+    reproduced bit-for-bit by the FAST engine running through the
+    topology path (TierSystem sweep + DecisionPlan.selections + the
+    shared topology accounting) at depth 1."""
+    payload = json.loads((GOLDEN_DIR / f"{name}.json").read_text())
+    sc = get_scenario(name)
+    traces, values = sc.golden_grid()
+    base = _wrap_depth1(sc.config(engine="fast", **sc.golden_base))
+    grid = run_grid(traces, base, sc.axis, values,
+                    policies=sc.policies, share_system=True)
+    assert payload["cells"], name
+    for cell in payload["cells"]:
+        res = grid[(cell["trace"], hashable_label(cell["label"]))]
+        topo_res = res[cell["policy"]]
+        assert isinstance(topo_res, TopoResult)
+        for f, want in cell["result"].items():
+            got = getattr(topo_res, f)
+            assert got == want, (
+                f"{name}/{cell['trace']}/{cell['label']}/{cell['policy']}"
+                f": field {f!r}: depth-1 topology {got!r} != flat golden "
+                f"{want!r}")
+
+
+@pytest.mark.parametrize("engine", ("fast", "reference"))
+def test_depth1_path_matches_flat_run_policies(engine):
+    """Direct flat-vs-wrapped comparison on BOTH engines, including the
+    advertisement totals the golden files don't pin."""
+    trace = get_trace("gradle", 2_500, seed=3)
+    cfg = SimConfig(engine=engine, cache_size=500, update_interval=120,
+                    advert_policy="self_adjusting", advert_bandwidth=0.5,
+                    advert_threshold=0.05, advert_check=16)
+    policies = ("fna", "fna_cal", "fno", "pi")
+    flat = run_policies(trace, cfg, policies=policies)
+    topo = run_topology(np.asarray(trace, np.uint64), _wrap_depth1(cfg),
+                        policies)
+    for p in policies:
+        for f in SIM_FIELDS:
+            assert getattr(topo[p], f) == getattr(flat[p], f), (engine, p, f)
+        assert topo[p].advert_events == flat[p].advert_events, (engine, p)
+        assert topo[p].advert_bytes == flat[p].advert_bytes, (engine, p)
+        # the hierarchy metrics collapse to their degenerate values
+        assert topo[p].tier_arrivals == [len(trace)]
+        assert topo[p].rejected == 0
+        assert topo[p].total_latency == 0.0
+        assert topo[p].origin_fetches == len(trace) - topo[p].hits
+
+
+# ---------------------------------------------------------------------------
+# Deep topologies: fast == reference, and the accounting is hand-checkable
+# ---------------------------------------------------------------------------
+
+def _asdict_panel(out):
+    return {p: dataclasses.asdict(r) for p, r in out.items()}
+
+
+@pytest.mark.parametrize("kind,kw", (
+    ("path", dict(depth=3)),
+    ("tree", dict(depth=2, fanout=3)),
+))
+def test_deep_fast_matches_reference(kind, kw):
+    trace = np.asarray(get_trace("gradle", 2_000, seed=5), np.uint64)
+    topo = TopoConfig(
+        base=SimConfig(engine="fast", update_interval=80),
+        kind=kind,
+        tiers=(dict(cache_size=200, tier_latency=1.0, hop_penalty=4.0,
+                    queue_capacity=30, queue_window=32),
+               dict(cache_size=500, update_interval=160, tier_latency=8.0),
+               dict(cache_size=900, update_interval=320)),
+        origin_penalty=80.0, origin_latency=32.0, **kw)
+    policies = ("fna", "fna_cal", "pi")
+    fast = run_topology(trace, topo, policies)
+    ref = run_topology(
+        trace, dataclasses.replace(
+            topo, base=dataclasses.replace(topo.base, engine="reference")),
+        policies)
+    assert _asdict_panel(fast) == _asdict_panel(ref)
+    for p in policies:
+        assert fast[p].advert_events == ref[p].advert_events
+        assert fast[p].advert_bytes == ref[p].advert_bytes
+
+
+@pytest.mark.parametrize("engine", ("fast", "reference"))
+def test_hand_computed_queue_latency_origin(engine):
+    """Four arrivals of one key through a single queued tier: every
+    accounting term (admission, hit, rejection, origin penalty/latency)
+    hand-derived.  in_dj = F,T,T,T (big cache); the 1-per-2 window
+    admits arrivals 0 and 2; ``pi`` probes the designated cache only
+    when resident, so arrival 2 is the single hit."""
+    trace = np.asarray([7, 7, 7, 7], np.uint64)
+    cfg = SimConfig(engine=engine, cache_size=1_000)
+    topo = TopoConfig(
+        base=cfg, kind="path", depth=1,
+        tiers=(dict(queue_capacity=1, queue_window=2, tier_latency=2.0),),
+        origin_penalty=50.0, origin_latency=5.0)
+    res = run_topology(trace, topo, ("pi",))["pi"]
+    dj = 7 % cfg.n_caches
+    probe_cost = float(cfg.costs[dj])
+    assert res.n_requests == 4
+    assert res.tier_arrivals == [4]
+    assert res.tier_rejected == [2] and res.rejected == 2
+    assert res.tier_hits == [1] and res.hits == 1
+    assert res.origin_fetches == 3
+    # cost: one admitted resident probe + three origin fetches
+    assert res.total_cost == 3 * 50.0 + probe_cost
+    # latency: every arrival pays the tier, the unserved pay the origin
+    assert res.total_latency == 4 * 2.0 + 3 * 5.0
+    assert res.pos_accesses + res.neg_accesses == 1
+    assert res.mean_latency == res.total_latency / 4
+    assert res.rejection_rate == 2 / 4
+    for key in ("mean_latency", "rejection_rate", "origin_fetches"):
+        assert key in res.to_dict()
+
+
+def test_tree_leaf_routing_partitions_trace():
+    """Leaf assignment is a deterministic partition of the client
+    stream, and level-1 arrivals are exactly the leaves' residency
+    misses."""
+    trace = np.asarray(get_trace("wiki", 3_000, seed=2), np.uint64)
+    leaves = edge_assignment(trace, 4)
+    assert leaves.shape == trace.shape
+    assert int(np.bincount(leaves, minlength=4).sum()) == trace.shape[0]
+    assert set(np.unique(leaves)) <= set(range(4))
+    topo = TopoConfig(base=SimConfig(engine="fast"), kind="tree",
+                      depth=2, fanout=4,
+                      tiers=(dict(cache_size=300),
+                             dict(cache_size=1_200)))
+    res = run_topology(trace, topo, ("fna",))["fna"]
+    assert res.tier_arrivals[0] == trace.shape[0]
+    # forwarded = leaf arrivals minus leaf residents (policy-independent)
+    assert res.tier_arrivals[1] == trace.shape[0] - sum(
+        int(SystemTrace.compute(
+            Simulator(topo.node_config(0, i)),
+            trace[leaves == i]).in_dj.sum())
+        for i in range(4))
+
+
+# ---------------------------------------------------------------------------
+# Cross-tier sweep sharing: the depth axis recomputes nothing it has seen
+# ---------------------------------------------------------------------------
+
+def _depth_axis_base() -> TopoConfig:
+    return TopoConfig(
+        base=SimConfig(engine="fast", update_interval=100),
+        kind="path", depth=3,
+        tiers=(dict(cache_size=250), dict(cache_size=600),
+               dict(cache_size=1_100)))
+
+
+def test_depth_axis_shares_tier_sweeps():
+    """Sweeping depth (1, 2, 3) with one shared pool computes exactly
+    one sweep per DISTINCT tier stream — 3 total, not 1 + 2 + 3 = 6 —
+    and the shared grid is bit-identical to per-cell recompute."""
+    traces = {"gradle": get_trace("gradle", 2_000, seed=7)}
+    base = _depth_axis_base()
+    before = systemstate.SWEEPS_COMPUTED
+    shared = run_topo_grid(traces, base, "depth", (1, 2, 3),
+                           policies=("fna", "pi"), share_system=True)
+    assert systemstate.SWEEPS_COMPUTED - before == 3
+    before = systemstate.SWEEPS_COMPUTED
+    indep = run_topo_grid(traces, base, "depth", (1, 2, 3),
+                          policies=("fna", "pi"), share_system=False)
+    assert systemstate.SWEEPS_COMPUTED - before == 6
+    assert set(shared) == set(indep)
+    for key in shared:
+        assert {p: dataclasses.asdict(r) for p, r in shared[key].items()} \
+            == {p: dataclasses.asdict(r) for p, r in indep[key].items()}, key
+
+
+def test_topology_store_reuses_tier_sweeps(tmp_path):
+    """A store-backed grid persists every tier sweep; a SECOND grid over
+    the same cells computes zero sweeps and returns identical results."""
+    store = ArtifactStore(tmp_path / "store")
+    traces = {"gradle": get_trace("gradle", 2_000, seed=7)}
+    base = _depth_axis_base()
+    first = run_topo_grid(traces, base, "depth", (1, 2, 3),
+                          policies=("fna",), share_system=True, store=store)
+    assert store.stats["sweep_misses"] == 3
+    before = systemstate.SWEEPS_COMPUTED
+    again = run_topo_grid(traces, base, "depth", (1, 2, 3),
+                          policies=("fna",), share_system=True, store=store)
+    assert systemstate.SWEEPS_COMPUTED - before == 0
+    assert store.stats["sweep_hits"] >= 3
+    for key in first:
+        assert dataclasses.asdict(first[key]["fna"]) \
+            == dataclasses.asdict(again[key]["fna"]), key
+
+
+def test_topo_cell_routing_and_validation():
+    base = _depth_axis_base()
+    # TopoConfig field
+    assert topo_cell(base, {"depth": 2}).depth == 2
+    # tier knob broadcast vs per-depth distribution
+    bcast = topo_cell(base, {"hop_penalty": 3.0})
+    assert [bcast.tier_spec(d).hop_penalty for d in range(3)] == [3.0] * 3
+    per = topo_cell(base, {"tier_latency": (1.0, 2.0, 4.0)})
+    assert [per.tier_spec(d).tier_latency for d in range(3)] == [1.0, 2.0, 4.0]
+    with pytest.raises(ValueError, match="length"):
+        topo_cell(base, {"tier_latency": (1.0, 2.0)})
+    # SimConfig field lands on the base and propagates to every tier
+    sim = topo_cell(base, {"miss_penalty": 64.0})
+    assert sim.base.miss_penalty == 64.0
+    assert sim.origin_penalty_value() == 64.0
+    with pytest.raises(ValueError, match="kind"):
+        TopoConfig(base=base.base, kind="ring")
+    with pytest.raises(ValueError, match="depth"):
+        TopoConfig(base=base.base, depth=0)
+    with pytest.raises(ValueError, match="fanout"):
+        TopoConfig(base=base.base, kind="tree", fanout=0)
+    with pytest.raises(ValueError, match="neither"):
+        TopoConfig(base=base.base, tiers=(dict(cache_sz=10),))
+
+
+# ---------------------------------------------------------------------------
+# Satellites: chunk_size validation + benchmark --only validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", (0, -3, 2.5, True, "64"))
+def test_compute_chunk_size_validated(bad):
+    trace = get_trace("gradle", 50, seed=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        SystemTrace.compute(Simulator(SimConfig(engine="fast")), trace,
+                            chunk_size=bad)
+
+
+@pytest.mark.parametrize("bad", (0, -3, 2.5, True, "64"))
+def test_iter_trace_chunks_chunk_size_validated_eagerly(bad, tmp_path):
+    """The generator used to defer the error to the first next(); the
+    bad argument must now raise AT THE CALL, file untouched."""
+    from repro.cachesim.tracefiles import iter_trace_chunks
+    with pytest.raises(ValueError, match="chunk_size"):
+        iter_trace_chunks(tmp_path / "never_read.log", chunk_size=bad)
+
+
+def test_benchmarks_only_unknown_section_errors():
+    """``--only`` with an unknown section used to run NOTHING and exit
+    0; it must argparse-error, naming the bad section and the valid
+    ones."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "sim_bogus"],
+        capture_output=True, text=True, cwd=REPO, env=env)
+    assert proc.returncode == 2
+    assert "unknown --only section" in proc.stderr
+    assert "sim_bogus" in proc.stderr
+    assert "sim_topology" in proc.stderr        # valid list shown

@@ -32,17 +32,21 @@ REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 
 from repro.cachesim.scenarios import GOLDEN_SCENARIOS, get_scenario  # noqa: E402
-from repro.cachesim.simulator import SimResult  # noqa: E402
 from repro.cachesim.sweep import cell_label, run_grid  # noqa: E402
 
 GOLDEN_DIR = REPO / "tests" / "golden"
 
-#: every raw SimResult accumulator, pinned exactly (no rounding)
-RESULT_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
-
 
 def _jsonable(v):
     return list(v) if isinstance(v, tuple) else v
+
+
+def result_payload(res) -> dict:
+    """Every raw accumulator of a result dataclass, pinned exactly (no
+    rounding).  Works for flat ``SimResult`` and topology ``TopoResult``
+    cells alike — whatever dataclass the grid returns is what's pinned."""
+    return {f.name: _jsonable(getattr(res, f.name))
+            for f in dataclasses.fields(res)}
 
 
 def golden_payload(name: str) -> dict:
@@ -61,7 +65,7 @@ def golden_payload(name: str) -> dict:
                     "trace": trace_name,
                     "label": _jsonable(label),
                     "policy": policy,
-                    "result": {f: getattr(res, f) for f in RESULT_FIELDS},
+                    "result": result_payload(res),
                 })
     return {
         "scenario": sc.name,
